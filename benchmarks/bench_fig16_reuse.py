@@ -1,0 +1,54 @@
+"""Paper Fig. 16: adaptive reuse & fusion gains + global-buffer sweep.
+
+Pure dataflow model on the real SD v1.4 conv-layer list (paper Fig. 13,
+layers 0-51).  Paper reference: reuse saves ~24.3%, fusion ~30.5% of
+off-chip access; the 2MB buffer is the sweet spot.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_unet_config
+from repro.core import reuse_planner as RP
+
+MB = 2**20
+
+
+def main():
+    layers = RP.unet_conv_layers(get_unet_config("sd_v14"))
+    emit("fig16", "n_conv_layers", len(layers))
+
+    plans = RP.plan_layers(layers, 2 * MB)
+    s = RP.traffic_summary(plans)
+    emit("fig16", "baseline_traffic", s["baseline_bytes"], "bytes", "im2col streaming model")
+    emit("fig16", "optimized_traffic", s["optimized_bytes"], "bytes")
+    emit("fig16", "total_reduction", round(s["reduction"], 3), "frac")
+    emit("fig16", "n_input_reuse", s["n_input_reuse"])
+    emit("fig16", "n_weight_reuse", s["n_weight_reuse"])
+    emit("fig16", "n_cross_fused", s["n_cross_fused"])
+    emit("fig16", "n_layer_fused", s["n_layer_fused"])
+
+    # reuse-only vs reuse+fusion ablation (paper: 24.3% / 30.5%)
+    reuse_only = sum(
+        min(l.weight, l.act_in) + max(l.weight, l.act_in) + l.act_out
+        if min(l.weight, l.act_in) <= 2 * MB
+        else l.weight + 2 * l.act_in + l.act_out
+        for l in layers
+    )
+    base = s["baseline_bytes"]
+    emit("fig16", "reuse_saving", round(1 - reuse_only / base, 3), "frac",
+         "adaptive reuse only")
+    emit("fig16", "fusion_extra_saving",
+         round((reuse_only - s["optimized_bytes"]) / base, 3), "frac",
+         "fusion on top of reuse")
+
+    # buffer sweep, normalized to the 256KB point (paper Fig. 16 right)
+    sizes = [256 * 1024, 512 * 1024, MB, 2 * MB, 4 * MB, 8 * MB]
+    sweep = RP.buffer_sweep(layers, sizes)
+    ref = sweep[sizes[0]]
+    for sz in sizes:
+        emit("fig16", f"buffer_sweep/{sz//1024}KB", round(sweep[sz] / ref, 3),
+             "norm", "off-chip traffic vs 256KB buffer")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 17: technique breakdown — hardware ablation (a,b-left),
+PAS speedups on optimized hardware (b-right), and the roofline shift (a).
+
+Paper reference points (SD v1.4): AC 1.24x, +AD 1.37x, +SC 1.65x over the
+im2col baseline; PAS adds 2.31-3.10x depending on T_sparse; energy 1.73x
+(hw) x 2.63x (PAS).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.latency_model import HW, Options, pas_step_latency, unet_latency
+from repro.common.types import PASPlan
+from repro.configs import get_unet_config
+from repro.core import framework as FW
+
+
+def main():
+    cfg = get_unet_config("sd_v14")
+    hw = HW()
+
+    base = unet_latency(cfg, hw, Options())
+    ac = unet_latency(cfg, hw, Options(address_centric=True))
+    ad = unet_latency(cfg, hw, Options(address_centric=True, adaptive_dataflow=True))
+    sc = unet_latency(cfg, hw, Options(True, True, True))
+
+    emit("fig17", "baseline_im2col/total", round(base["total_s"], 4), "s/step")
+    emit("fig17", "address_centric/speedup", round(base["total_s"] / ac["total_s"], 2), "x",
+         "paper: 1.24x")
+    emit("fig17", "adaptive_dataflow/speedup", round(base["total_s"] / ad["total_s"], 2), "x",
+         "paper: 1.37x")
+    emit("fig17", "streaming/speedup", round(base["total_s"] / sc["total_s"], 2), "x",
+         "paper: 1.65x")
+
+    # operational intensity shift under PAS (roofline, Fig. 17a)
+    oi_full = 2 * sc["conv_macs"] / max(sc["traffic_bytes"], 1)
+    emit("fig17", "oi_full_unet", round(oi_full, 1), "FLOP/B")
+
+    # PAS speedups on the optimized hardware (Fig. 17b right)
+    total = 50
+    for t_sparse in (2, 3, 4, 5):
+        plan = PASPlan(25, 4, t_sparse, 2, 2)
+        t_full = total * sc["total_s"]
+        t_pas = pas_step_latency(cfg, hw, Options(True, True, True), plan.schedule(total))
+        speed = t_full / t_pas
+        theo = FW.mac_reduction(cfg, plan, total)
+        emit("fig17", f"PAS-25-{t_sparse}/speedup", round(speed, 2), "x",
+             f"theoretical {theo:.2f}x; paper band 2.31-3.10x")
+        emit("fig17", f"PAS-25-{t_sparse}/frac_of_theoretical", round(speed / theo, 3))
+
+    # energy model: on-chip (proportional to MACs executed) + off-chip
+    # (proportional to traffic); 15.98W on-chip vs DDR ~ 20 pJ/byte
+    def energy(stats, steps_cost):
+        on = 15.98 * stats["total_s"] * steps_cost
+        off = stats["traffic_bytes"] * 20e-12 * steps_cost
+        return on + off
+
+    f = FW.cost_function(cfg)
+    plan = PASPlan(25, 4, 4, 2, 2)
+    e_base = energy(base, total)
+    e_hw = energy(sc, total)
+    e_pas = energy(sc, sum(f(l) for l in plan.schedule(total)))
+    emit("fig17", "energy/hw_saving", round(e_base / e_hw, 2), "x", "paper: 1.73x")
+    emit("fig17", "energy/pas_extra_saving", round(e_hw / e_pas, 2), "x", "paper: 2.63x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — correctness-path
+cost only) is NOT timed; what matters on this host is the XLA-jitted
+reference math the kernels implement.  We time the jnp oracles to give a
+CPU-side throughput sanity row per kernel, plus the uniconv-vs-lax.conv
+parity check that the address-centric lowering costs nothing extra.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jitted
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.uniconv.ref import uniconv_ref
+
+
+def main():
+    # uniconv storage format vs native lax.conv on identical math
+    h = w = 64
+    cin = cout = 128
+    x = jax.random.normal(jax.random.key(0), (1, h * w, cin))
+    wk = jax.random.normal(jax.random.key(1), (9, cin, cout)) * 0.05
+
+    t_uni = time_jitted(jax.jit(lambda a, b: uniconv_ref(a, b, (h, w), 3)), x, wk)
+    x_nhwc = x.reshape(1, h, w, cin)
+    w_hwio = wk.reshape(3, 3, cin, cout)
+
+    def lax_conv(a, b):
+        return jax.lax.conv_general_dilated(
+            a, b, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    t_lax = time_jitted(jax.jit(lax_conv), x_nhwc, w_hwio)
+    emit("kernels", "uniconv_ref/latency", round(t_uni * 1e3, 2), "ms", f"{h}x{w}x{cin}->{cout}")
+    emit("kernels", "lax_conv/latency", round(t_lax * 1e3, 2), "ms")
+    emit("kernels", "uniconv_overhead", round(t_uni / t_lax, 2), "x",
+         "address-centric decomposition vs native conv (XLA CPU)")
+
+    # flash attention oracle throughput
+    q = jax.random.normal(jax.random.key(2), (1, 8, 2048, 64))
+    k = jax.random.normal(jax.random.key(3), (1, 8, 2048, 64))
+    v = jax.random.normal(jax.random.key(4), (1, 8, 2048, 64))
+    t = time_jitted(jax.jit(lambda *a: flash_attention_ref(*a)), q, k, v)
+    flops = 4 * 8 * 2048 * 2048 * 64
+    emit("kernels", "attention_ref/latency", round(t * 1e3, 2), "ms", "B1 H8 S2048 D64")
+    emit("kernels", "attention_ref/gflops", round(flops / t / 1e9, 1), "GFLOP/s")
+
+
+if __name__ == "__main__":
+    main()

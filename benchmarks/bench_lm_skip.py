@@ -1,0 +1,75 @@
+"""Beyond-paper: PAS-style layer skipping for LM decode (core/lm_skip.py).
+
+Reports the analytic per-token FLOP reduction for each assigned dense arch
+under a {front=2, back=2, refresh=4} plan, plus the measured logit-cosine
+of skip-decode vs exact decode on a small trained-shape model — the LM
+analogue of Table II's reduction/quality trade-off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.common.types import LMConfig
+from repro.configs import ARCH_IDS, get_lm_config
+from repro.core import lm_skip as LS
+from repro.models import transformer as T
+
+
+def analytic_rows():
+    for arch in ARCH_IDS:
+        cfg = get_lm_config(arch, "full")
+        if cfg.family in ("ssm", "hybrid") or cfg.moe is not None:
+            continue  # recurrent decode / MoE routing not covered by lm_skip
+        n_units = cfg.n_layers // len(cfg.pattern)
+        if n_units < 6:
+            continue
+        plan = LS.SkipPlan(front=2, back=2, refresh_every=4)
+        red = LS.flops_reduction(cfg, plan)
+        emit("lm_skip", f"{arch}/flops_reduction", round(red, 2), "x",
+             "front=2 back=2 refresh=4")
+
+
+def measured_quality():
+    cfg = LMConfig(
+        name="mini8", family="dense", n_layers=8, d_model=96, n_heads=4,
+        n_kv_heads=2, d_ff=192, vocab_size=256, dtype="float32",
+    )
+    params = T.init_lm(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    b, s = toks.shape
+
+    cache = T.init_cache(cfg, b, s)
+    exact = []
+    for pos in range(s):
+        lg, cache = T.lm_decode(cfg, params, cache, toks[:, pos], jnp.asarray(pos, jnp.int32))
+        exact.append(lg)
+    exact = np.asarray(jnp.stack(exact, 1), np.float32)
+
+    for refresh in (2, 3, 4):
+        plan = LS.SkipPlan(front=2, back=2, refresh_every=refresh)
+        state = LS.init_skip_state(cfg, b, s)
+        outs = []
+        for pos in range(s):
+            lg, state = LS.skip_decode(cfg, params, state, toks[:, pos],
+                                       jnp.asarray(pos, jnp.int32), plan)
+            outs.append(lg)
+        approx = np.asarray(jnp.stack(outs, 1), np.float32)
+        cos = float(
+            (approx.ravel() @ exact.ravel())
+            / (np.linalg.norm(approx) * np.linalg.norm(exact) + 1e-9)
+        )
+        emit("lm_skip", f"mini8/refresh-{refresh}/logit_cosine", round(cos, 4))
+        emit("lm_skip", f"mini8/refresh-{refresh}/flops_reduction",
+             round(LS.flops_reduction(cfg, plan), 2), "x")
+
+
+def main():
+    analytic_rows()
+    measured_quality()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline table from the multi-pod dry-run artifacts (results/dryrun).
+
+For every (arch x shape) cell on the single-pod 16x16 mesh: the three
+roofline terms, the dominant bottleneck, and MODEL_FLOPS / HLO_FLOPs.
+Run ``python -m repro.launch.dryrun --all --both-meshes --out
+results/dryrun`` first; this bench only reads the JSONs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def main():
+    files = sorted(glob.glob(os.path.join(RESULTS, "*__sp.json")))
+    if not files:
+        emit("roofline", "no_dryrun_results", 0, "", f"run dryrun --all first ({RESULTS})")
+        return
+    for fn in files:
+        r = json.load(open(fn))
+        if not r.get("ok"):
+            emit("roofline", f"{r['arch']}/{r['cell']}/FAILED", 0, "", r.get("error", ""))
+            continue
+        rf = r["roofline_s"]
+        tag = f"{r['arch']}/{r['cell']}"
+        dom = r["bottleneck"]
+        t_dom = rf[dom]
+        t_bound = max(rf.values())
+        emit("roofline", f"{tag}/compute_s", f"{rf['compute']:.4g}", "s")
+        emit("roofline", f"{tag}/memory_s", f"{rf['memory']:.4g}", "s")
+        emit("roofline", f"{tag}/collective_s", f"{rf['collective']:.4g}", "s")
+        emit("roofline", f"{tag}/bottleneck", dom)
+        if t_bound > 0:
+            emit("roofline", f"{tag}/roofline_fraction",
+                 round(rf["compute"] / t_bound, 3), "",
+                 "compute term / binding term (1.0 = compute-bound at peak)")
+        emit("roofline", f"{tag}/model_flops_ratio",
+             round(r.get("model_flops_ratio", 0.0), 3), "",
+             "MODEL_FLOPS / HLO_FLOPs (useful-compute share)")
+        emit("roofline", f"{tag}/hbm_peak_gib",
+             round(r["memory"]["peak_bytes"] / 2**30, 2), "GiB")
+
+
+if __name__ == "__main__":
+    main()

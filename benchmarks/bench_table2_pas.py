@@ -1,0 +1,56 @@
+"""Paper Table II: PAS configurations — MAC reduction per model (exact
+analytic Eq. 3 on the real SD v1.4 / v2.1 / XL configs) + image-quality
+proxy (PSNR / cosine vs the full sampler) measured on the toy U-Net.
+
+Paper reference points (MAC reduction): SD1.4 PAS-25/3 = 2.72, /4 = 2.84,
+/5 = 3.31; SD2.1 /4 = 2.98; XL /4 = 4.28.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.common.types import DiffusionConfig, PASPlan
+from repro.configs import get_unet_config
+from repro.core import framework as FW
+from repro.core import sampler as SM
+from repro.core.metrics import latent_cosine, latent_psnr
+from repro.models import unet as U
+
+
+def mac_table():
+    for model, t_complete in (("sd_v14", 4), ("sd_v21", 3), ("sd_xl", 3)):
+        cfg = get_unet_config(model)
+        for t_sparse in (2, 3, 4, 5):
+            plan = PASPlan(25, t_complete, t_sparse, 2, 2)
+            red = FW.mac_reduction(cfg, plan, 50)
+            emit("table2", f"{model}/PAS-25-{t_sparse}/mac_reduction", round(red, 2), "x")
+
+
+def quality_proxy():
+    cfg = get_unet_config("sd_toy")
+    dcfg = DiffusionConfig(timesteps_sample=20)
+    params = U.init_unet(jax.random.key(0), cfg)
+    b, L = 2, cfg.latent_size**2
+    x = jax.random.normal(jax.random.key(1), (b, L, cfg.in_channels))
+    ctx = jax.random.normal(jax.random.key(2), (b, cfg.ctx_len, cfg.ctx_dim)) * 0.3
+    un = jnp.zeros_like(ctx)
+
+    full = SM.pas_denoise(cfg, dcfg, params, None, x, ctx, un)
+    for t_sparse in (2, 3, 4, 5):
+        plan = PASPlan(t_sketch=10, t_complete=2, t_sparse=t_sparse, l_sketch=3, l_refine=2)
+        pas = SM.pas_denoise(cfg, dcfg, params, plan, x, ctx, un)
+        emit("table2", f"toy/PAS-10-{t_sparse}/psnr_vs_full", round(latent_psnr(pas, full), 2), "dB")
+        emit("table2", f"toy/PAS-10-{t_sparse}/cosine_vs_full", round(latent_cosine(pas, full), 4))
+        emit("table2", f"toy/PAS-10-{t_sparse}/mac_reduction",
+             round(FW.mac_reduction(cfg, plan, 20), 2), "x")
+
+
+def main():
+    mac_table()
+    quality_proxy()
+
+
+if __name__ == "__main__":
+    main()

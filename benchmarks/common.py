@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS: list[tuple] = []
+
+
+def emit(bench: str, name: str, value, unit: str = "", note: str = ""):
+    ROWS.append((bench, name, value, unit, note))
+    print(f"{bench},{name},{value},{unit},{note}")
+
+
+def time_jitted(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of a jitted callable (CPU measurement)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Emits ``bench,name,value,unit,note`` CSV rows.  Usage:
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig16 t2   # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    bench_fig2_profile,
+    bench_lm_skip,
+    bench_fig15_streaming,
+    bench_fig16_reuse,
+    bench_fig17_breakdown,
+    bench_fig18_sota_acc,
+    bench_kernels,
+    bench_roofline,
+    bench_table2_pas,
+    bench_table3_sota,
+)
+
+BENCHES = [
+    ("fig2_profile", bench_fig2_profile),
+    ("table2_pas", bench_table2_pas),
+    ("table3_sota", bench_table3_sota),
+    ("fig15_streaming", bench_fig15_streaming),
+    ("fig16_reuse", bench_fig16_reuse),
+    ("fig17_breakdown", bench_fig17_breakdown),
+    ("fig18_sota_acc", bench_fig18_sota_acc),
+    ("kernels", bench_kernels),
+    ("lm_skip", bench_lm_skip),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    filters = sys.argv[1:]
+    print("bench,name,value,unit,note")
+    failures = []
+    for name, mod in BENCHES:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"# {name}: ok ({time.time()-t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name}: FAILED {type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

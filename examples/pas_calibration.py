@@ -1,0 +1,92 @@
+"""The paper's general optimization framework (Sec. III-C, Fig. 7),
+end-to-end on a trained toy model:
+
+  step 1  profile   — sample with feature capture, compute shift scores
+                      (Eq. 1), detect outlier blocks, find D* (Eq. 2)
+  step 2  parse     — MAC breakdown -> cost function f(l) (Fig. 6)
+  step 3  search    — enumerate PAS plans under the constraints (Eq. 3)
+  step 4  validate  — generate with each candidate, check the quality
+                      proxy, emit the best valid plan
+
+Run:  PYTHONPATH=src python examples/pas_calibration.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import DiffusionConfig
+from repro.configs import get_unet_config
+from repro.core import framework as FW
+from repro.core import phase_division as PD
+from repro.core import sampler as SM
+from repro.core import shift_score as SS
+from repro.core.metrics import latent_cosine
+from repro.models import unet as U
+
+
+def main():
+    ucfg = get_unet_config("sd_toy")
+    dcfg = DiffusionConfig(timesteps_sample=16)
+    total = dcfg.timesteps_sample
+    key = jax.random.key(0)
+    params = U.init_unet(key, ucfg)
+    n_up = U.n_up_steps(ucfg)
+
+    b, L = 2, ucfg.latent_size**2
+    # calibration prompt set (paper: 5% of the target set)
+    n_cal = 3
+    all_scores = []
+    print(f"[1/4] profiling {n_cal} calibration prompts ...")
+    for i in range(n_cal):
+        ki, kn = jax.random.split(jax.random.key(i + 1))
+        ctx = jax.random.normal(ki, (b, ucfg.ctx_len, ucfg.ctx_dim)) * 0.3
+        noise = jax.random.normal(kn, (b, L, ucfg.in_channels))
+        _, traj = SM.denoise_with_capture(
+            ucfg, dcfg, params, noise, ctx, jnp.zeros_like(ctx),
+            capture_steps=tuple(range(n_up)),
+        )
+        all_scores.append(SS.shift_scores(traj))
+    profile = SS.build_profile(all_scores)
+    d_star = PD.find_transition(profile)
+    stats = PD.phase_stats(profile, d_star)
+    print(f"    D* = {d_star}  mu_sketch={stats['mu_sketch']:.3f} "
+          f"mu_refine={stats['mu_refine']:.3f} outliers={profile.outlier_blocks}")
+
+    print("[2/4] parsing the model -> cost function f(l) ...")
+    f = FW.cost_function(ucfg)
+    print("    f(l) =", [round(f(l), 3) for l in range(1, n_up + 1)])
+
+    print("[3/4] searching PAS plans under constraints ...")
+    cons = FW.SearchConstraints(
+        total_steps=total,
+        d_star=d_star,
+        n_outlier_blocks=max(len(profile.outlier_blocks), 1),
+        min_quality=0.90,  # cosine proxy threshold
+        t_complete_range=(2, 3),
+        t_sparse_range=(2, 3, 4),
+    )
+    sols = FW.search_plans(ucfg, cons)
+    print(f"    {len(sols)} feasible plans; best MAC reduction "
+          f"{sols[0].mac_reduction:.2f}x")
+
+    print("[4/4] validating candidates against the quality proxy ...")
+    ctx = jax.random.normal(jax.random.key(99), (b, ucfg.ctx_len, ucfg.ctx_dim)) * 0.3
+    noise = jax.random.normal(jax.random.key(100), (b, L, ucfg.in_channels))
+    un = jnp.zeros_like(ctx)
+    full = SM.pas_denoise(ucfg, dcfg, params, None, noise, ctx, un)
+
+    def quality(plan):
+        out = SM.pas_denoise(ucfg, dcfg, params, plan, noise, ctx, un)
+        return latent_cosine(out, full)
+
+    valid = FW.validate_solutions(sols, quality, cons.min_quality, max_evals=6)
+    if not valid:
+        print("    no plan met the quality bar; relax constraints")
+        return
+    best = valid[0]
+    print(f"\nBEST PLAN: {best.plan}")
+    print(f"  MAC reduction {best.mac_reduction:.2f}x at quality {best.quality:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end driver: train a ~100M-parameter StableDiff-family U-Net for
+a few hundred steps on structured synthetic latents, with checkpointing,
+then generate with both the original and the PAS sampler.
+
+This is the (b)-deliverable end-to-end example.  The 'sd_100m' config is
+the paper's architecture scaled to ~100M params (base 128, 3 levels).
+
+Run:  PYTHONPATH=src python examples/train_unet.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import DiffusionConfig, PASPlan
+from repro.configs import get_unet_config
+from repro.core import framework as FW
+from repro.core import sampler as SM
+from repro.core.metrics import latent_cosine
+from repro.launch.train import make_unet_train_step, train_unet
+from repro.models import unet as U
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_unet_ckpt")
+    args = ap.parse_args()
+
+    # reuse the training driver in unet mode with the ~100M config
+    drv = argparse.Namespace(
+        unet="sd_100m", steps=args.steps, batch=args.batch, lr=2e-4, seed=0,
+        ckpt_dir=args.ckpt_dir, save_every=100, log_every=20,
+        compress_grads=False,
+    )
+    res = train_unet(drv)
+    print(f"[example] training: first_loss={res['first_loss']:.4f} "
+          f"final_loss={res['final_loss']:.4f}")
+    if not res["final_loss"] < res["first_loss"]:
+        sys.exit("training did not reduce the loss")
+
+    # sample from the trained model: original vs PAS
+    ucfg = get_unet_config("sd_100m")
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.optim import init_adamw
+
+    params0 = U.init_unet(jax.random.key(0), ucfg)
+    cm = CheckpointManager(args.ckpt_dir)
+    step, state = cm.restore_latest({"params": params0, "opt": init_adamw(params0)})
+    params = state["params"]
+    print(f"[example] restored step {step}")
+
+    dcfg = DiffusionConfig(timesteps_sample=20)
+    b, L = 2, ucfg.latent_size**2
+    noise = jax.random.normal(jax.random.key(1), (b, L, ucfg.in_channels))
+    ctx = jnp.zeros((b, ucfg.ctx_len, ucfg.ctx_dim))
+    full = SM.pas_denoise(ucfg, dcfg, params, None, noise, ctx, ctx)
+    plan = PASPlan(t_sketch=10, t_complete=2, t_sparse=3, l_sketch=3, l_refine=2)
+    pas = SM.pas_denoise(ucfg, dcfg, params, plan, noise, ctx, ctx)
+    print(f"[example] PAS vs full cosine={latent_cosine(pas, full):.4f} "
+          f"MAC_red={FW.mac_reduction(ucfg, plan, 20):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

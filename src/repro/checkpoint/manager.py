@@ -1,0 +1,127 @@
+"""Sharded, atomic, keep-K checkpointing with auto-resume.
+
+Layout (one directory per step):
+
+    <root>/step_000120/
+        meta.json                   # step, pytree structure digest, host count
+        host00.npz ... hostNN.npz   # per-host shards (flat key -> array)
+        COMMIT                      # written last; a checkpoint without it
+                                    # is torn and ignored by restore
+
+Writes go to ``step_XXXX.tmp`` and are renamed into place only after the
+COMMIT marker lands — a preempted host can never publish a half-written
+checkpoint.  ``restore_latest`` walks backwards over steps until it finds
+a committed one, which is the node-failure story: if the newest write was
+torn by the failure, training resumes from the previous good step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import shutil
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz cannot serialize ml_dtypes (bf16 etc.); widen them to fp32.
+
+    The original dtype is restored from the template tree at load time, so
+    the bf16 -> fp32 -> bf16 round trip is bit-exact.
+    """
+    if arr.dtype not in (np.float16, np.float32, np.float64) and arr.dtype.kind == "V":
+        return arr.astype(np.float32)
+    if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        return arr.astype(np.float32)
+    return arr
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = _to_savable(np.asarray(leaf))
+    return out
+
+
+def _unflatten(tree_like: Any, flat: dict[str, np.ndarray]) -> Any:
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in paths_and_leaves:
+        key = jax.tree_util.keystr(path)
+        arr = flat[key]
+        leaves.append(np.asarray(arr).reshape(leaf.shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: str
+    keep: int = 3
+    process_index: int = 0
+    process_count: int = 1
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> str:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.root, name + ".tmp")
+        final = os.path.join(self.root, name)
+        os.makedirs(tmp, exist_ok=True)
+
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, f"host{self.process_index:02d}.npz"), **flat)
+        if self.process_index == 0:
+            meta = {
+                "step": step,
+                "time": time.time(),
+                "process_count": self.process_count,
+                "n_leaves": len(flat),
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            # commit marker last; rename is atomic on POSIX
+            with open(os.path.join(tmp, "COMMIT"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- read ----------------------------------------------------------------
+    def list_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.root, d, "COMMIT")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore(self, step: int, tree_like: Any) -> Any:
+        path = os.path.join(self.root, f"step_{step:08d}", f"host{self.process_index:02d}.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten(tree_like, flat)
+
+    def restore_latest(self, tree_like: Any) -> tuple[int, Any] | None:
+        for step in reversed(self.list_steps()):
+            try:
+                return step, self.restore(step, tree_like)
+            except Exception:
+                continue  # torn shard: fall back to the previous commit
+        return None

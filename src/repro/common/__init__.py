@@ -1,0 +1,25 @@
+from repro.common.types import (
+    AttnSpec,
+    DiffusionConfig,
+    GLOBAL,
+    LMConfig,
+    MoESpec,
+    PASPlan,
+    SHAPE_CELLS,
+    ShapeCell,
+    UNetConfig,
+    local,
+)
+
+__all__ = [
+    "AttnSpec",
+    "DiffusionConfig",
+    "GLOBAL",
+    "LMConfig",
+    "MoESpec",
+    "PASPlan",
+    "SHAPE_CELLS",
+    "ShapeCell",
+    "UNetConfig",
+    "local",
+]

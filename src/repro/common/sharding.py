@@ -1,0 +1,168 @@
+"""Sharding helpers: PartitionSpec trees and mesh-aware placement.
+
+Conventions
+-----------
+Meshes carry axes ``("data", "model")`` (single pod) or
+``("pod", "data", "model")`` (multi-pod).  The batch axis of activations is
+sharded over ``batch_axes(mesh)`` = ``("data",)`` or ``("pod", "data")``;
+tensor-parallel weight dimensions are sharded over ``"model"``.
+
+Param trees produced by the model init functions are nested dicts; each model
+module exposes a matching ``*_pspecs`` function that mirrors the tree with
+``PartitionSpec`` leaves.  Layer-stacked params (leading scan axis) get a
+``None`` prepended automatically via :func:`stacked`.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes over which the global batch is sharded."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    out = 1
+    for a in batch_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def stacked(spec: P) -> P:
+    """Prepend a replicated leading axis (for scan-stacked layer params)."""
+    return P(None, *spec)
+
+
+def tree_pspecs_to_shardings(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def divisible_spec(dim: int, axis_size: int, spec_axis: str | None) -> str | None:
+    """Drop a sharding axis when the dimension does not divide evenly.
+
+    GSPMD requires even tiling for in_shardings we pass explicitly; rather
+    than padding weights we replicate the offending dimension.  Callers log
+    when this fires (it should only fire for odd vocab sizes like 32001).
+    """
+    if spec_axis is None:
+        return None
+    return spec_axis if dim % axis_size == 0 else None
+
+
+def abstract_like(tree: Any) -> Any:
+    """ShapeDtypeStruct tree mirroring a (possibly lazily-evaluated) tree."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (batch-DP + sequence-parallel residuals)
+#
+# GSPMD's profitability heuristics sometimes reshard the residual stream to
+# batch-replicated/feature-sharded, exploding the remat-scan carry.  The
+# launchers register the active mesh here; model code pins activations to
+# P((pod, data), model-on-seq, None).  Without a registered mesh (CPU smoke
+# tests) these are no-ops.
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: list[Mesh | None] = [None]
+
+
+def set_activation_mesh(mesh: Mesh | None) -> None:
+    _ACT_MESH[0] = mesh
+
+
+def get_activation_mesh() -> Mesh | None:
+    return _ACT_MESH[0]
+
+
+# ---------------------------------------------------------------------------
+# Layer-scan unroll control.
+#
+# XLA's cost analysis counts a while-loop body ONCE rather than multiplying
+# by the trip count, so the roofline sweep lowers the layer stack fully
+# unrolled (``set_scan_unroll(True)``) to obtain accurate FLOP / byte /
+# collective counts.  Production runs keep the rolled scan (HLO size O(1)
+# in depth); dryrun.py compiles both and reports memory from the rolled
+# program, costs from the unrolled one.
+# ---------------------------------------------------------------------------
+
+_SCAN_UNROLL: list[int | bool] = [1]
+
+
+def set_scan_unroll(u: int | bool) -> None:
+    _SCAN_UNROLL[0] = u
+
+
+def scan_unroll() -> int | bool:
+    return _SCAN_UNROLL[0]
+
+
+# ---------------------------------------------------------------------------
+# GQA prefill attention layout (perf knob).
+#
+# Default SP keeps activations sequence-sharded and GSPMD gathers the full
+# residual (d_model wide) around every attention matmul.  With GQA the
+# k/v projections are several times narrower than d_model, so gathering
+# ONLY k and v over the model axis — while q stays sequence-sharded —
+# moves far fewer bytes.  Enabled per-cell by launch.specs.
+# ---------------------------------------------------------------------------
+
+_ATTN_KV_GATHER = [False]
+
+
+def set_attn_kv_gather(v: bool) -> None:
+    _ATTN_KV_GATHER[0] = v
+
+
+def constrain_qkv(q, k, v):
+    """q: [B, S, H, Dh]; k/v: [B, S, Hkv, Dh].  Pin q sequence-sharded over
+    the model axis and k/v replicated over it (gather point)."""
+    mesh = _ACT_MESH[0]
+    if mesh is None or not _ATTN_KV_GATHER[0]:
+        return q, k, v
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+    b_ax = ba if q.shape[0] % dp == 0 and q.shape[0] >= dp else None
+    ms = mesh.shape.get("model", 1)
+    s_ax = "model" if q.shape[1] % ms == 0 and q.shape[1] >= ms else None
+    q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, P(b_ax, s_ax, None, None)))
+    kv_spec = NamedSharding(mesh, P(b_ax, None, None, None))
+    k = jax.lax.with_sharding_constraint(k, kv_spec)
+    v = jax.lax.with_sharding_constraint(v, kv_spec)
+    return q, k, v
+
+
+def constrain_act(x: jax.Array) -> jax.Array:
+    """Pin [B, S, D] (or [B, S]) activations: batch over DP axes, sequence
+    over the model axis (sequence parallelism for scan-saved residuals)."""
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+    b_axis = ba if (x.ndim >= 1 and x.shape[0] % dp == 0 and x.shape[0] >= dp) else None
+    dims = [b_axis]
+    if x.ndim >= 2:
+        ms = mesh.shape.get("model", 1)
+        seq_ok = x.shape[1] % ms == 0 and x.shape[1] >= ms
+        dims.append("model" if seq_ok else None)
+    dims += [None] * (x.ndim - len(dims))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*dims))
+    )

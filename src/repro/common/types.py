@@ -1,0 +1,264 @@
+"""Shared configuration dataclasses for the repro framework.
+
+Every model family (LM transformer, xLSTM, Hymba hybrid, StableDiff U-Net)
+is described by one of the config dataclasses below.  Configs are plain,
+hashable-ish dataclasses so they can be closed over by jitted functions and
+reported verbatim in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Attention layer specification (per layer-pattern slot)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Attention behaviour for one slot of the repeating layer pattern."""
+
+    kind: str = "global"  # "global" | "local" (sliding window) | "none"
+    window: int = 0  # sliding-window size when kind == "local"
+
+    def __post_init__(self):
+        if self.kind not in ("global", "local", "none"):
+            raise ValueError(f"bad attention kind: {self.kind}")
+        if self.kind == "local" and self.window <= 0:
+            raise ValueError("local attention needs window > 0")
+
+
+GLOBAL = AttnSpec("global")
+
+
+def local(window: int) -> AttnSpec:
+    return AttnSpec("local", window)
+
+
+# ---------------------------------------------------------------------------
+# MoE specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_expert: int  # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # 'ep' shards experts over the model axis; 'tp' shards d_expert instead
+    # (used when num_experts does not divide the model axis, e.g. Mixtral 8e
+    # on a 16-way model axis).
+    shard_mode: str = "auto"
+
+
+# ---------------------------------------------------------------------------
+# Generic LM transformer config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str  # "dense" | "moe" | "audio" | "vlm" | "ssm" | "hybrid"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # layer pattern: `pattern` repeats until n_layers is covered; a partial
+    # final repeat is allowed (e.g. gemma3's 26 = 4x(5L+1G) + 2L tail).
+    pattern: Tuple[AttnSpec, ...] = (GLOBAL,)
+
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    act: str = "silu"  # "silu" | "gelu"
+    glu: bool = True  # SwiGLU/GeGLU vs plain MLP
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma-style sqrt(d_model) embedding scaling
+    logit_softcap: float = 0.0  # gemma2-style final-logit soft capping
+    attn_softcap: float = 0.0  # gemma2-style attention-logit soft capping
+    qk_norm: bool = False  # qwen3-style per-head RMSNorm on q/k
+    post_norm: bool = False  # gemma2/3-style post-sublayer norms
+    moe: Optional[MoESpec] = None
+    # number of parallel output heads over the same vocab (musicgen codebooks)
+    n_codebooks: int = 1
+    # modality frontend stub: if set, inputs are precomputed embeddings of
+    # this dimensionality instead of token ids.
+    frontend_stub: Optional[str] = None  # None | "audio_frames" | "vision_patches"
+
+    # ssm / hybrid extras
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_heads % max(self.n_kv_heads, 1):
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    # -- derived -----------------------------------------------------------
+    def layer_specs(self) -> Tuple[AttnSpec, ...]:
+        reps = -(-self.n_layers // len(self.pattern))
+        return tuple((self.pattern * reps)[: self.n_layers])
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.family == "ssm":  # mLSTM block: qkv + gates + out
+            inner = self.ssm_expand * d
+            attn = d * inner * 3 + 2 * d * self.n_heads + inner * d
+        if self.family == "hybrid":
+            inner = self.ssm_expand * d
+            attn += d * inner * 2 + inner * d + inner * self.ssm_state * 2
+        if self.moe is not None:
+            mlp = self.moe.num_experts * 3 * d * self.moe.d_expert
+            mlp += d * self.moe.num_experts  # router
+        elif f > 0:
+            mlp = (3 if self.glu else 2) * d * f
+        else:
+            mlp = 0
+        per_layer = attn + mlp + 2 * d  # + norms
+        emb = v * d * (1 if self.tie_embeddings else 2) * self.n_codebooks
+        return self.n_layers * per_layer + emb
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        mlp_all = self.n_layers * self.moe.num_experts * 3 * d * self.moe.d_expert
+        mlp_act = self.n_layers * self.moe.top_k * 3 * d * self.moe.d_expert
+        return full - mlp_all + mlp_act
+
+
+# ---------------------------------------------------------------------------
+# StableDiff U-Net config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    name: str
+    in_channels: int = 4
+    out_channels: int = 4
+    base_channels: int = 320
+    channel_mult: Tuple[int, ...] = (1, 2, 4, 4)
+    n_res_blocks: int = 2
+    attn_levels: Tuple[int, ...] = (0, 1, 2)  # levels with transformer blocks
+    n_heads: int = 8
+    tf_depth: int = 1  # transformer blocks per attention site
+    ctx_dim: int = 768  # text-conditioning width
+    ctx_len: int = 77
+    time_dim: int = 1280
+    groups: int = 32
+    latent_size: int = 64  # spatial size of the latent
+    dtype: str = "float32"
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.channel_mult)
+
+    @property
+    def n_skip_blocks(self) -> int:
+        """Number of paper-indexed down/up block pairs (Fig. 3: 12 for SD)."""
+        # conv_in counts as down-block 1; each level contributes n_res_blocks
+        # blocks; each non-final level adds one down/upsample block.
+        return 1 + self.n_levels * self.n_res_blocks + (self.n_levels - 1)
+
+
+# ---------------------------------------------------------------------------
+# Diffusion sampler config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    timesteps_train: int = 1000
+    timesteps_sample: int = 50
+    scheduler: str = "pndm"  # "ddim" | "pndm"
+    beta_start: float = 0.00085
+    beta_end: float = 0.012
+    beta_schedule: str = "scaled_linear"
+    guidance_scale: float = 7.5
+
+
+# ---------------------------------------------------------------------------
+# Phase-aware-sampling plan (the paper's hyper-parameter set, Sec. III-B)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PASPlan:
+    """{T_sketch, T_complete, T_sparse, L_sketch, L_refine} of the paper."""
+
+    t_sketch: int
+    t_complete: int
+    t_sparse: int
+    l_sketch: int
+    l_refine: int
+
+    def validate(self, total_steps: int, n_blocks: int, d_star: int | None = None):
+        if not (0 < self.t_complete <= self.t_sketch <= total_steps):
+            raise ValueError("need 0 < T_complete <= T_sketch <= T")
+        if self.t_sparse < 1:
+            raise ValueError("T_sparse >= 1")
+        if not (0 < self.l_refine <= self.l_sketch <= n_blocks):
+            raise ValueError("need 0 < L_refine <= L_sketch <= n_blocks")
+        if d_star is not None and self.t_sketch < d_star:
+            raise ValueError(
+                f"T_sketch={self.t_sketch} must be >= D*={d_star} (paper Sec. III-B)"
+            )
+
+    def schedule(self, total_steps: int) -> list[int]:
+        """Per-timestep block budget l_t. -1 denotes a full U-Net run."""
+        out = []
+        for t in range(total_steps):
+            if t < self.t_complete:
+                out.append(-1)
+            elif t < self.t_sketch:
+                since = t - self.t_complete
+                out.append(-1 if (since + 1) % self.t_sparse == 0 else self.l_sketch)
+            else:
+                out.append(self.l_refine)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells (assignment: 4 per arch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPE_CELLS = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)

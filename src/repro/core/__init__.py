@@ -1,0 +1,10 @@
+"""SD-Acc core: phase-aware sampling, optimization framework, reuse planner.
+
+Public surface:
+  shift_score     — Eq. 1 shift scores + outlier detection (Fig. 4)
+  phase_division  — Eq. 2 two-means transition search (D*)
+  sampler         — PAS executor (lax.scan full/partial switch, Fig. 5)
+  framework       — cost model f(l), Eq. 3 MAC reduction, plan search
+  metrics         — reference-relative quality proxies
+  reuse_planner   — Sec. V adaptive reuse & fusion traffic model
+"""

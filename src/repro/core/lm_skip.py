@@ -1,0 +1,197 @@
+"""PAS-inspired layer skipping for autoregressive LM decode (beyond-paper).
+
+The paper scopes phase-aware sampling to diffusion, where the SAME latent
+is iterated T times and deep features drift slowly.  LM decode has a
+weaker analogue: between adjacent tokens the *contribution of the middle
+layer stack* (its residual delta) is far more stable than the token
+stream itself.  This module generalizes the paper's mechanism — reuse a
+cached deep-feature contribution, refresh every ``refresh_every`` steps:
+
+* FULL step (every ``refresh_every``-th token): run all units, record the
+  middle stack's residual delta  Δ = h_after_mid − h_before_mid.
+* SKIP step: run the front/back units normally; replace the middle stack
+  with ``h += Δ``.  The middle layers' KV caches are kept *coherent* by a
+  write-through pass: their (k, v) projections are computed from the
+  approximated input and written at the current position (~2·d·kv_dim
+  FLOPs per layer instead of the full ~12·d² block) so that the next FULL
+  step attends over a gap-free cache.
+
+This is explicitly NOT claimed as paper-faithful (DESIGN.md §4); it is
+the generalization experiment.  Quality is measured as logit cosine vs
+exact decode in ``tests/test_lm_skip.py``.
+
+Only the generic transformer family is supported (ssm/hybrid decode is
+already O(1) per token and has no heavyweight KV stack to skip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import LMConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SkipPlan:
+    """{front, back, refresh_every} — the LM analogue of
+    {L_sketch/L_refine, T_sparse}."""
+
+    front: int  # leading units always executed
+    back: int  # trailing units always executed
+    refresh_every: int  # full run period (the paper's T_sparse)
+
+    def validate(self, n_units: int):
+        if self.front + self.back >= n_units:
+            raise ValueError("front+back must leave a non-empty middle stack")
+        if min(self.front, self.back) < 1:
+            raise ValueError("keep at least one unit at each end (paper: "
+                             "L_refine >= outlier blocks at BOTH ends matters for LMs)")
+        if self.refresh_every < 2:
+            raise ValueError("refresh_every < 2 never skips")
+
+
+def _slice_units(tree: Any, a: int, b: int) -> Any:
+    return jax.tree.map(lambda x: x[a:b], tree)
+
+
+def _unit_decode(cfg: LMConfig, unit_p, unit_c, h, pos):
+    new_c = {}
+    for j, spec in enumerate(cfg.pattern):
+        h, c = T.block_decode(cfg, unit_p[f"slot{j}"], spec, h, unit_c[f"slot{j}"], pos)
+        new_c[f"slot{j}"] = c
+    return h, new_c
+
+
+def _run_range(cfg, params_blocks, cache_blocks, h, pos, a, b):
+    """Decode units [a, b) via scan over the stacked params/cache slice."""
+    if a == b:
+        return h, cache_blocks
+    p_sl = _slice_units(params_blocks, a, b)
+    c_sl = _slice_units(cache_blocks, a, b)
+
+    def step(hc, xs):
+        up, uc = xs
+        hc, nc = _unit_decode(cfg, up, uc, hc, pos)
+        return hc, nc
+
+    h, new_c = jax.lax.scan(step, h, (p_sl, c_sl))
+    merged = jax.tree.map(
+        lambda full, part: jax.lax.dynamic_update_slice_in_dim(full, part, a, axis=0),
+        cache_blocks, new_c,
+    )
+    return h, merged
+
+
+def _kv_writethrough(cfg: LMConfig, params_blocks, cache_blocks, h, pos, a, b):
+    """Write (k, v) of units [a, b) from the approximated input so skipped
+    layers leave no cache gaps.  No attention/MLP compute."""
+    p_sl = _slice_units(params_blocks, a, b)
+    c_sl = _slice_units(cache_blocks, a, b)
+    bsz = h.shape[0]
+    positions = jnp.broadcast_to(pos[None], (bsz,))[:, None]
+
+    def write_one(unit_p, unit_c):
+        new_c = {}
+        for j, spec in enumerate(cfg.pattern):
+            p = unit_p[f"slot{j}"]
+            c = unit_c[f"slot{j}"]
+            x = L.apply_norm(cfg, p["norm1"], h)
+            k = (x @ p["attn"]["wk"]).reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+            v = (x @ p["attn"]["wv"]).reshape(bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+            if cfg.qk_norm:
+                k = T._rms_head(k, p["attn"]["k_norm"])
+            if cfg.use_rope:
+                k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+            ring = spec.kind == "local" and c.k.shape[1] == spec.window
+            slot = jnp.mod(pos, c.k.shape[1]) if ring else pos
+            new_c[f"slot{j}"] = attn_lib.KVCache(
+                k=jax.lax.dynamic_update_slice_in_dim(c.k, k, slot, axis=1),
+                v=jax.lax.dynamic_update_slice_in_dim(c.v, v, slot, axis=1),
+            )
+        return new_c
+
+    new_sl = jax.vmap(write_one)(p_sl, c_sl)
+    return jax.tree.map(
+        lambda full, part: jax.lax.dynamic_update_slice_in_dim(full, part, a, axis=0),
+        cache_blocks, new_sl,
+    )
+
+
+def init_skip_state(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    cache = T.init_cache(cfg, batch, max_len)
+    return {
+        "cache": cache,
+        "delta": jnp.zeros((batch, 1, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+def skip_decode(
+    cfg: LMConfig,
+    params: Params,
+    state: dict,
+    token: jax.Array,
+    pos: jax.Array,
+    plan: SkipPlan,
+) -> tuple[jax.Array, dict]:
+    """One decode step under the skip plan.  Matches ``lm_decode``'s
+    signature modulo the extra plan/state."""
+    n_units, n_tail = T._pattern_split(cfg)
+    plan.validate(n_units)
+    a, b = plan.front, n_units - plan.back
+
+    inputs = token[:, None] if token.ndim == 1 else token[:, None, :]
+    h = T._embed_in(cfg, params, inputs)
+    cache = state["cache"]
+    blocks_c = cache["blocks"]
+
+    # front units always run
+    h, blocks_c = _run_range(cfg, params["blocks"], blocks_c, h, pos, 0, a)
+
+    def full_mid(h, blocks_c):
+        h_in = h
+        h, blocks_c = _run_range(cfg, params["blocks"], blocks_c, h, pos, a, b)
+        return h, blocks_c, (h - h_in).astype(state["delta"].dtype)
+
+    def skip_mid(h, blocks_c):
+        h_out = h + state["delta"]
+        blocks_c = _kv_writethrough(cfg, params["blocks"], blocks_c, h_out, pos, a, b)
+        return h_out, blocks_c, state["delta"]
+
+    is_full = jnp.equal(jnp.mod(pos, plan.refresh_every), 0)
+    h, blocks_c, delta = jax.lax.cond(
+        is_full, lambda op: full_mid(*op), lambda op: skip_mid(*op), (h, blocks_c)
+    )
+
+    # back units + tail always run
+    h, blocks_c = _run_range(cfg, params["blocks"], blocks_c, h, pos, b, n_units)
+    new_cache = {"blocks": blocks_c, "tail": []}
+    for j in range(n_tail):
+        h, c = T.block_decode(
+            cfg, params["tail"][j], cfg.pattern[j], h, cache["tail"][j], pos
+        )
+        new_cache["tail"].append(c)
+
+    logits = T._logits_out(cfg, params, h)[:, 0]
+    return logits, {"cache": new_cache, "delta": delta}
+
+
+def flops_reduction(cfg: LMConfig, plan: SkipPlan) -> float:
+    """Analytic per-token FLOP reduction (attention ignored, like Eq. 3)."""
+    n_units, _ = T._pattern_split(cfg)
+    d = cfg.d_model
+    per_block = 2 * d * (cfg.q_dim + 2 * cfg.kv_dim + cfg.q_dim) + 2 * 3 * d * cfg.d_ff
+    writethrough = 2 * d * 2 * cfg.kv_dim
+    mid = n_units - plan.front - plan.back
+    full_cost = n_units * per_block
+    skip_cost = (n_units - mid) * per_block + mid * writethrough
+    k = plan.refresh_every
+    avg = (full_cost + (k - 1) * skip_cost) / k
+    return full_cost / avg

@@ -1,0 +1,27 @@
+"""Quality proxies for PAS validation under offline constraints.
+
+The paper scores CLIP/FID/IS against MS-COCO with pretrained SD weights.
+Neither pretrained weights nor scoring networks are available offline, so
+the framework's validation stage uses *reference-relative* proxies: the
+PAS output is compared against the full-sampler output for the same seed
+and prompt (this is also how DeepCache reports ablation fidelity).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def latent_mse(a, b) -> float:
+    return float(jnp.mean((a - b) ** 2))
+
+
+def latent_psnr(a, b) -> float:
+    rng = float(jnp.maximum(jnp.max(b) - jnp.min(b), 1e-6))
+    mse = latent_mse(a, b)
+    return float(20 * np.log10(rng) - 10 * np.log10(max(mse, 1e-12)))
+
+
+def latent_cosine(a, b) -> float:
+    af, bf = np.asarray(a, np.float64).ravel(), np.asarray(b, np.float64).ravel()
+    return float(af @ bf / (np.linalg.norm(af) * np.linalg.norm(bf) + 1e-12))

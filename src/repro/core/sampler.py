@@ -1,0 +1,173 @@
+"""Phase-aware sampling executor (paper Sec. III-B, Fig. 5).
+
+The whole denoising loop — scheduler step, classifier-free guidance, and
+the full/partial U-Net switch — is a single ``lax.scan`` whose per-step
+branch is selected by a precomputed plan vector, so the entire PAS sampler
+jits, shards and dry-runs as one XLA program:
+
+    branch 0: full U-Net, refresh the sketch-feature cache
+    branch 1: partial run with the top L_sketch blocks  (sketching phase)
+    branch 2: partial run with the top L_refine blocks  (refinement phase)
+
+The cached entry features are the CFG-doubled main-branch activations of
+the relevant up-steps, reused exactly as in the paper's Fig. 5 zoom-in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
+from repro.models import diffusion as D
+from repro.models import unet as U
+
+Params = dict[str, Any]
+
+FULL, SKETCH, REFINE = 0, 1, 2
+
+
+def plan_to_branches(plan: PASPlan, total_steps: int) -> jnp.ndarray:
+    sched = plan.schedule(total_steps)
+    br = [FULL if l < 0 else (SKETCH if l == plan.l_sketch else REFINE) for l in sched]
+    # disambiguate when l_sketch == l_refine: phase decides the label
+    for t in range(total_steps):
+        if sched[t] >= 0 and t >= plan.t_sketch:
+            br[t] = REFINE
+    return jnp.asarray(br, jnp.int32)
+
+
+def _entry_steps(ucfg: UNetConfig, plan: PASPlan) -> tuple[int, int]:
+    n_up = U.n_up_steps(ucfg)
+    return n_up - plan.l_sketch, n_up - plan.l_refine
+
+
+def _feat_shape(ucfg: UNetConfig, entry_step: int, batch: int) -> tuple[int, ...]:
+    """Shape of the main-branch feature entering ``entry_step``."""
+    chans = [ucfg.base_channels * m for m in ucfg.channel_mult]
+    plan = U._up_plan(ucfg)
+    lvl = plan[entry_step][0]
+    # resolution at which the entry step consumes its skip
+    size = ucfg.latent_size >> lvl
+    if entry_step == 0:
+        c = chans[-1]
+    else:
+        prev_lvl = plan[entry_step - 1][0]
+        c = chans[prev_lvl]
+    return (batch, size * size, c)
+
+
+def pas_denoise(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    params: Params,
+    plan: PASPlan | None,
+    x_t: jax.Array,  # [B, L, C] initial noise
+    ctx_cond: jax.Array,
+    ctx_uncond: jax.Array,
+) -> jax.Array:
+    """Run the full PAS sampling loop. ``plan=None`` -> original sampler."""
+    sched = D.make_schedule(dcfg)
+    ts = D.sample_timesteps(dcfg)
+    total = dcfg.timesteps_sample
+    t_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+    b = x_t.shape[0]
+    b2 = 2 * b
+    guidance = dcfg.guidance_scale
+
+    if plan is None:
+        branches = jnp.zeros((total,), jnp.int32)
+        e_sk = e_rf = U.n_up_steps(ucfg)  # unused; keep shapes minimal
+        plan = PASPlan(total, total, 1, 1, 1)
+    else:
+        branches = plan_to_branches(plan, total)
+    e_sk, e_rf = _entry_steps(ucfg, plan)
+
+    ctx2 = jnp.concatenate([ctx_cond, ctx_uncond], axis=0)
+
+    def run_unet(x, t, entry_step, entry_feat, capture):
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.broadcast_to(t, (b2,))
+        eps2, cap = U.unet_apply(
+            ucfg, params, x2, t2, ctx2,
+            entry_step=entry_step, entry_feat=entry_feat, capture_steps=capture,
+        )
+        e_c, e_u = jnp.split(eps2, 2, axis=0)
+        return e_u + guidance * (e_c - e_u), cap
+
+    f_sk0 = jnp.zeros(_feat_shape(ucfg, e_sk, b2), x_t.dtype)
+    f_rf0 = jnp.zeros(_feat_shape(ucfg, e_rf, b2), x_t.dtype)
+
+    def full_branch(op):
+        x, t, f_sk, f_rf = op
+        eps, cap = run_unet(x, t, 0, None, capture=(e_sk, e_rf))
+        return eps, cap[e_sk], cap[e_rf]
+
+    def sketch_branch(op):
+        x, t, f_sk, f_rf = op
+        eps, _ = run_unet(x, t, e_sk, f_sk, capture=())
+        return eps, f_sk, f_rf
+
+    def refine_branch(op):
+        x, t, f_sk, f_rf = op
+        eps, _ = run_unet(x, t, e_rf, f_rf, capture=())
+        return eps, f_sk, f_rf
+
+    def step(carry, inp):
+        x, pndm, f_sk, f_rf = carry
+        t, tp, br = inp
+        eps, f_sk, f_rf = jax.lax.switch(
+            br, (full_branch, sketch_branch, refine_branch), (x, t, f_sk, f_rf)
+        )
+        if dcfg.scheduler == "pndm":
+            x, pndm = D.pndm_step(sched, pndm, x, eps, t, tp)
+        else:
+            x = D.ddim_step(sched, x, eps, t, tp)
+        return (x, pndm, f_sk, f_rf), None
+
+    pndm0 = D.pndm_init(x_t.shape, x_t.dtype)
+    (x0, _, _, _), _ = jax.lax.scan(step, (x_t, pndm0, f_sk0, f_rf0), (ts, t_prev, branches))
+    return x0
+
+
+def denoise_with_capture(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    params: Params,
+    x_t: jax.Array,
+    ctx_cond: jax.Array,
+    ctx_uncond: jax.Array,
+    capture_steps: tuple[int, ...],
+) -> tuple[jax.Array, list[dict[int, jax.Array]]]:
+    """Full sampling with per-timestep feature capture (calibration path).
+
+    Python loop (T is small) so the trajectory can stream to host memory.
+    """
+    sched = D.make_schedule(dcfg)
+    ts = D.sample_timesteps(dcfg)
+    b = x_t.shape[0]
+    ctx2 = jnp.concatenate([ctx_cond, ctx_uncond], axis=0)
+
+    @jax.jit
+    def one(x, pndm, t, tp):
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.broadcast_to(t, (2 * b,))
+        eps2, cap = U.unet_apply(ucfg, params, x2, t2, ctx2, capture_steps=capture_steps)
+        e_c, e_u = jnp.split(eps2, 2, axis=0)
+        eps = e_u + dcfg.guidance_scale * (e_c - e_u)
+        if dcfg.scheduler == "pndm":
+            x, pndm = D.pndm_step(sched, pndm, x, eps, t, tp)
+        else:
+            x = D.ddim_step(sched, x, eps, t, tp)
+        return x, pndm, cap
+
+    traj = []
+    x = x_t
+    pndm = D.pndm_init(x_t.shape, x_t.dtype)
+    for i in range(dcfg.timesteps_sample):
+        tp = ts[i + 1] if i + 1 < dcfg.timesteps_sample else jnp.int32(-1)
+        x, pndm, cap = one(x, pndm, ts[i], tp)
+        traj.append({k: jax.device_get(v) for k, v in cap.items()})
+    return x, traj

@@ -1,0 +1,86 @@
+"""Shift-score analysis (paper Eq. 1, Fig. 4).
+
+    S_t^i = || A_t^i - A_{t-1}^i ||_2 / || A_{t-1}^i ||_2
+
+where ``A_t^i`` is the main-branch input activation of the i-th upsampling
+block at denoising timestep t.  Paper indexing: block 1 is the *topmost*
+(highest-resolution) upsampling block; our U-Net executes up-steps deepest
+first, so paper block i corresponds to up-step ``n_up - i``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paper_block_to_up_step(n_up: int, block: int) -> int:
+    """Paper block index (1 = topmost) -> executor up-step index."""
+    assert 1 <= block <= n_up
+    return n_up - block
+
+
+def up_step_to_paper_block(n_up: int, step: int) -> int:
+    return n_up - step
+
+
+def shift_scores(traj: Sequence[dict[int, jax.Array]]) -> np.ndarray:
+    """traj[t][step] = captured activation at timestep t.
+
+    Returns scores [T-1, n_blocks] in *paper block order* (block 1 first).
+    """
+    steps = sorted(traj[0].keys())
+    t_total = len(traj)
+    out = np.zeros((t_total - 1, len(steps)))
+    for ti in range(1, t_total):
+        for si, s in enumerate(steps):
+            prev = np.asarray(traj[ti - 1][s], np.float32)
+            cur = np.asarray(traj[ti][s], np.float32)
+            denom = np.linalg.norm(prev.ravel()) + 1e-12
+            out[ti - 1, si] = np.linalg.norm((cur - prev).ravel()) / denom
+    # captured steps ascend (deep->top); paper blocks descend resolution,
+    # block 1 = last executed step -> reverse the column order
+    return out[:, ::-1]
+
+
+def minmax_normalize(scores: np.ndarray) -> np.ndarray:
+    """Per-block min-max scaling to [0, 1] (paper's normalization)."""
+    lo = scores.min(axis=0, keepdims=True)
+    hi = scores.max(axis=0, keepdims=True)
+    return (scores - lo) / np.maximum(hi - lo, 1e-12)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftProfile:
+    """Aggregated shift-score statistics over a calibration set."""
+
+    scores: np.ndarray  # [T-1, n_blocks], min-max normalized, image-averaged
+    outlier_blocks: tuple[int, ...]  # paper block indices (1-based)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.scores.shape[1]
+
+
+def detect_outliers(scores: np.ndarray, late_frac: float = 0.25, z: float = 1.0) -> tuple[int, ...]:
+    """Blocks whose shift score stays high in the late (refinement) phase.
+
+    Key Observation 2 of the paper: the top U-Net blocks keep varying while
+    everything else stabilizes.  A block is an outlier when its mean score
+    over the last ``late_frac`` of timesteps exceeds mean + z*std of all
+    blocks' late scores.
+    """
+    t = scores.shape[0]
+    late = scores[int((1 - late_frac) * t):]
+    per_block = late.mean(axis=0)
+    thresh = per_block.mean() + z * per_block.std()
+    return tuple(int(i) + 1 for i in np.nonzero(per_block > thresh)[0])
+
+
+def build_profile(all_scores: Sequence[np.ndarray]) -> ShiftProfile:
+    """Average per-image score curves, normalize, detect outliers."""
+    avg = np.mean([minmax_normalize(s) for s in all_scores], axis=0)
+    return ShiftProfile(scores=avg, outlier_blocks=detect_outliers(avg))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Prefetcher, latent_batch, token_batch
+
+__all__ = ["DataConfig", "Prefetcher", "latent_batch", "token_batch"]

@@ -1,0 +1,33 @@
+"""Shared kernel plumbing: interpret-mode detection and tiling helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    """Pallas kernels execute for real on TPU, in interpret mode elsewhere."""
+    return not on_tpu()
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_block(dim: int, preferred: int, align: int = 8) -> int:
+    """Largest block <= preferred that divides dim, honoring TPU alignment
+    when the dimension itself is aligned."""
+    if dim <= preferred:
+        return dim
+    b = preferred
+    while b >= align and dim % b:
+        b -= align
+    if b < align or dim % b:
+        # fall back to any divisor
+        for cand in range(min(preferred, dim), 0, -1):
+            if dim % cand == 0:
+                return cand
+    return b

@@ -1,0 +1,145 @@
+"""Flash-attention Pallas kernel — the paper's 2-stage streaming computing
+(Sec. IV-C, Eqs. 5-6) mapped to the TPU memory hierarchy.
+
+NCA stage: the running maximum and exponential partial sum (Eq. 5) are
+updated tile-by-tile as the pre-Matmul (Q·K^T) results stream out of the
+MXU — exactly the paper's tile-decoupled online update (Eq. 6).
+Norm stage: the 1/exp_sum normalization is folded into the output write of
+the post-Matmul (P·V).  Neither stage ever makes a separate pass over HBM.
+
+Grid: (batch*heads, num_q_blocks, num_k_blocks); the k-block axis is the
+innermost (sequential on TPU), carrying (m, l, acc) in VMEM scratch.
+Supports causal masking, sliding windows, and gemma-style logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # [1, bq, dh]
+    k_ref,  # [1, bk, dh]
+    v_ref,  # [1, bk, dh]
+    o_ref,  # [1, bq, dh]
+    m_scr,  # [bq] f32
+    l_scr,  # [bq] f32
+    acc_scr,  # [bq, dh] f32
+    *,
+    bq: int,
+    bk: int,
+    nk: int,
+    causal: bool,
+    window: int,
+    softcap: float,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full((bq,), NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros((bq,), jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bq, bk]
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    # --- NCA: online max / exp-sum update (paper Eqs. 5-6) ---------------
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)  # ES *= e^{prev_max - new_max}
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    # --- Norm: folded into the final output write ------------------------
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, H, S, Dh]
+    k: jax.Array,  # [B, Hkv, S, Dh]
+    v: jax.Array,  # [B, Hkv, S, Dh]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    rep = h // hkv
+    if rep > 1:  # GQA: expand KV heads (kernel-side broadcast)
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq,
+        bk=bk,
+        nk=nk,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=1.0 / math.sqrt(dh),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)

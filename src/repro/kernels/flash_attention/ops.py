@@ -1,0 +1,33 @@
+"""Jitted public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default, pick_block
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    s = q.shape[2]
+    bq = pick_block(s, block_q)
+    bk = pick_block(s, block_k)
+    return _kernel(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=interpret_default(),
+    )

@@ -1,0 +1,4 @@
+from repro.kernels.fused_matmul.ops import fused_matmul
+from repro.kernels.fused_matmul.ref import fused_matmul_ref
+
+__all__ = ["fused_matmul", "fused_matmul_ref"]

@@ -1,0 +1,129 @@
+"""Fused matmul with reconfigurable epilogue + streamed norm statistics.
+
+This kernel is the TPU analogue of the paper's reconfigurable VPU
+(Sec. IV-D) and the NCA half of 2-stage streaming computing (Sec. IV-C):
+
+* one MXU matmul datapath, with the epilogue muxed between
+  {none, bias, GELU(sigmoid form — the paper's choice), SiLU};
+* optionally, per-row (sum, square-sum) of the *output* are accumulated
+  while the result streams out of the MXU — the numerical characteristics
+  a following layernorm needs, acquired for free during the mandatory
+  output write (no extra pass, no full-tensor buffering).
+
+Grid: (M tiles, N tiles, K tiles), K innermost carrying the fp32 VMEM
+accumulator; the stats output revisits its M-tile block across N steps,
+accumulating partial row sums.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gelu(x):
+    return x * jax.nn.sigmoid(1.702 * x)
+
+
+def _fused_kernel(
+    a_ref,  # [bm, bk]
+    b_ref,  # [bk, bn]
+    bias_ref,  # [bn]
+    o_ref,  # [bm, bn]
+    stats_ref,  # [2, bm]
+    acc_scr,  # [bm, bn] f32
+    *,
+    nk: int,
+    nn: int,
+    epilogue: str,
+    with_stats: bool,
+):
+    ni = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        y = acc_scr[...]
+        if epilogue in ("bias", "gelu", "silu"):
+            y = y + bias_ref[...].astype(jnp.float32)
+        if epilogue == "gelu":
+            y = _gelu(y)
+        elif epilogue == "silu":
+            y = jax.nn.silu(y)
+        o_ref[...] = y.astype(o_ref.dtype)
+        if with_stats:
+            part = jnp.stack([jnp.sum(y, axis=-1), jnp.sum(y * y, axis=-1)])
+
+            @pl.when(ni == 0)
+            def _set():
+                stats_ref[...] = part
+
+            @pl.when(ni != 0)
+            def _add():
+                stats_ref[...] += part
+
+
+def fused_matmul(
+    a: jax.Array,  # [M, K]
+    b: jax.Array,  # [K, N]
+    bias: jax.Array | None = None,  # [N]
+    *,
+    epilogue: str = "none",  # none | bias | gelu | silu
+    with_stats: bool = False,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array | None]:
+    assert epilogue in ("none", "bias", "gelu", "silu")
+    m, k = a.shape
+    _, n = b.shape
+
+    def fit(dim, pref):
+        bsz = min(pref, dim)
+        while dim % bsz:
+            bsz -= 1
+        return bsz
+
+    bm, bn, bk = fit(m, block_m), fit(n, block_n), fit(k, block_k)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    if bias is None:
+        bias = jnp.zeros((n,), a.dtype)
+
+    kernel = functools.partial(
+        _fused_kernel, nk=nk, nn=nn, epilogue=epilogue, with_stats=with_stats
+    )
+    out, stats = pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((bn,), lambda mi, ni, ki: (ni,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((2, bm), lambda mi, ni, ki: (0, mi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((2, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b, bias)
+    return out, (stats if with_stats else None)

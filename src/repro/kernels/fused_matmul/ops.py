@@ -1,0 +1,32 @@
+"""Jitted public wrapper for fused_matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.fused_matmul.kernel import fused_matmul as _kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("epilogue", "with_stats", "block_m", "block_n", "block_k"),
+)
+def fused_matmul(
+    a,
+    b,
+    bias=None,
+    *,
+    epilogue: str = "none",
+    with_stats: bool = False,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+):
+    return _kernel(
+        a, b, bias,
+        epilogue=epilogue, with_stats=with_stats,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret_default(),
+    )

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for fused_matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_matmul_ref(a, b, bias=None, *, epilogue: str = "none", with_stats: bool = False):
+    y = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    if epilogue in ("bias", "gelu", "silu") and bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if epilogue == "gelu":
+        y = y * jax.nn.sigmoid(1.702 * y)
+    elif epilogue == "silu":
+        y = jax.nn.silu(y)
+    stats = None
+    if with_stats:
+        stats = jnp.stack([jnp.sum(y, axis=-1), jnp.sum(y * y, axis=-1)])
+    return y.astype(a.dtype), stats

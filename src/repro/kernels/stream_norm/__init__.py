@@ -1,0 +1,4 @@
+from repro.kernels.stream_norm.ops import stream_norm
+from repro.kernels.stream_norm.ref import stream_norm_ref
+
+__all__ = ["stream_norm", "stream_norm_ref"]

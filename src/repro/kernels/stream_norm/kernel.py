@@ -1,0 +1,67 @@
+"""One-pass streaming norm kernel (paper Sec. IV-C, Eq. 4).
+
+Layernorm is computed with a *single* traversal: sum and square-sum are
+accumulated while the row streams through VMEM (the NCA stage), then
+``var = E[x^2] - mean^2`` and the normalization are applied immediately —
+no second pass over HBM, which is precisely inefficiency-(i) the paper
+eliminates.  RMSNorm shares the datapath with the mean-branch muxed off
+(the reconfigurable-VPU story of Sec. IV-D).
+
+Grid: row tiles; the feature dimension stays VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _norm_kernel(x_ref, scale_ref, bias_ref, o_ref, *, mode: str, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [bm, d]
+    d = x.shape[-1]
+    # NCA: one pass produces both characteristics
+    s = jnp.sum(x, axis=-1, keepdims=True) / d
+    sq = jnp.sum(x * x, axis=-1, keepdims=True) / d
+    if mode == "layernorm":
+        var = jnp.maximum(sq - s * s, 0.0)
+        y = (x - s) * jax.lax.rsqrt(var + eps)
+    else:  # rmsnorm
+        y = x * jax.lax.rsqrt(sq + eps)
+    y = y * scale_ref[...].astype(jnp.float32)
+    if mode == "layernorm":
+        y = y + bias_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def stream_norm(
+    x: jax.Array,  # [M, D]
+    scale: jax.Array,  # [D]
+    bias: jax.Array | None,  # [D] (layernorm only)
+    *,
+    mode: str = "layernorm",
+    eps: float = 1e-6,
+    block_m: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    assert mode in ("layernorm", "rmsnorm")
+    m, d = x.shape
+    bm = min(block_m, m)
+    while m % bm:
+        bm -= 1
+    if bias is None:
+        bias = jnp.zeros((d,), x.dtype)
+    kernel = functools.partial(_norm_kernel, mode=mode, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, scale, bias)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for stream_norm (handles leading batch dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.stream_norm.kernel import stream_norm as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps", "block_m"))
+def stream_norm(x, scale, bias=None, *, mode: str = "layernorm", eps: float = 1e-6, block_m: int = 256):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = _kernel(
+        x2, scale, bias, mode=mode, eps=eps, block_m=block_m, interpret=interpret_default()
+    )
+    return out.reshape(shape)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for stream_norm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stream_norm_ref(
+    x: jax.Array, scale: jax.Array, bias: jax.Array | None, *, mode: str = "layernorm", eps: float = 1e-6
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if mode == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale
+        if bias is not None:
+            y = y + bias
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * scale
+    return y.astype(x.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.uniconv.ops import uniconv
+from repro.kernels.uniconv.ref import uniconv_ref
+
+__all__ = ["uniconv", "uniconv_ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the uniconv kernel (PyTorch 'padding=pad' semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uniconv_ref(x: jax.Array, w: jax.Array, hw: tuple[int, int], ksize: int) -> jax.Array:
+    """x: [B, L, Cin]; w: [F, Cin, Cout] -> [B, L, Cout]."""
+    b, l, cin = x.shape
+    h, wdim = hw
+    cout = w.shape[-1]
+    pad = (ksize - 1) // 2
+    x_nchw = x.reshape(b, h, wdim, cin).transpose(0, 3, 1, 2)
+    w_oihw = w.reshape(ksize, ksize, cin, cout).transpose(3, 2, 0, 1)
+    out = jax.lax.conv_general_dilated(
+        x_nchw.astype(jnp.float32),
+        w_oihw.astype(jnp.float32),
+        (1, 1),
+        [(pad, pad), (pad, pad)],
+    )
+    return out.transpose(0, 2, 3, 1).reshape(b, l, cout).astype(x.dtype)

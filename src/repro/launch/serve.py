@@ -1,0 +1,219 @@
+"""Batched serving drivers.
+
+``diffusion`` mode is the paper's deployment scenario: a request queue of
+text-conditioned image generations, served in fixed-size batches through
+the PAS sampler (full or phase-aware).  Requests carry their own prompt
+embedding; the server packs them, runs one jitted PAS denoise, and unpacks
+per-request latents through the VAE decoder.
+
+``lm`` mode serves an assigned LM arch: batched prefill then greedy decode
+against the KV cache (the ``decode_*`` dry-run cells lower exactly this
+step function).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --mode diffusion --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma3-1b --requests 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import DiffusionConfig, PASPlan
+from repro.configs import ARCH_IDS, get_lm_config, get_unet_config
+from repro.core import sampler as SM
+from repro.launch.steps import get_adapter
+from repro.models import unet as U
+from repro.models import vae as V
+
+
+# ---------------------------------------------------------------------------
+# Request plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    payload: Any  # ctx embedding (diffusion) or token prompt (lm)
+    submitted: float = dataclasses.field(default_factory=time.perf_counter)
+    completed: float | None = None
+    result: Any = None
+
+    @property
+    def latency(self) -> float:
+        return (self.completed or time.perf_counter()) - self.submitted
+
+
+def pack_batches(reqs: list[Request], batch: int) -> list[list[Request]]:
+    """Fixed-size batches; the tail batch is padded by repeating the last
+    request (results for pad lanes are dropped)."""
+    out = []
+    for i in range(0, len(reqs), batch):
+        out.append(reqs[i : i + batch])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Diffusion serving
+# ---------------------------------------------------------------------------
+
+
+def serve_diffusion(args) -> dict:
+    ucfg = get_unet_config(args.unet)
+    dcfg = DiffusionConfig(timesteps_sample=args.timesteps)
+    key = jax.random.key(args.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = U.init_unet(k1, ucfg)
+    vae_params = V.init_vae(k2, latent_channels=ucfg.in_channels)
+
+    plan = None
+    if args.pas:
+        n_up = U.n_up_steps(ucfg)
+        plan = PASPlan(
+            t_sketch=args.timesteps // 2,
+            t_complete=max(2, args.timesteps // 10),
+            t_sparse=4,
+            l_sketch=min(3, n_up),
+            l_refine=min(2, n_up),
+        )
+        plan.validate(args.timesteps, n_up)
+
+    b = args.batch
+    L = ucfg.latent_size**2
+
+    lhw = (ucfg.latent_size, ucfg.latent_size)
+
+    @jax.jit
+    def generate(noise, ctx):
+        uncond = jnp.zeros_like(ctx)
+        x0 = SM.pas_denoise(ucfg, dcfg, params, plan, noise, ctx, uncond)
+        return V.vae_decode(vae_params, x0, lhw)
+
+    # synthetic request stream: random prompt embeddings
+    reqs = [
+        Request(rid=i, payload=np.random.default_rng(i).normal(size=(ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32))
+        for i in range(args.requests)
+    ]
+
+    done: list[Request] = []
+    t_start = time.perf_counter()
+    for group in pack_batches(reqs, b):
+        ctx = np.stack([g.payload for g in group] + [group[-1].payload] * (b - len(group)))
+        noise = jax.random.normal(k3, (b, L, ucfg.in_channels))
+        imgs = generate(noise, jnp.asarray(ctx))
+        imgs.block_until_ready()
+        now = time.perf_counter()
+        for lane, g in enumerate(group):
+            g.result = np.asarray(imgs[lane])
+            g.completed = now
+            done.append(g)
+    wall = time.perf_counter() - t_start
+
+    lat = [r.latency for r in done]
+    stats = {
+        "mode": "diffusion",
+        "pas": bool(args.pas),
+        "requests": len(done),
+        "wall_s": round(wall, 3),
+        "throughput_img_s": round(len(done) / wall, 3),
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 3),
+        "p99_latency_s": round(float(np.percentile(lat, 99)), 3),
+        "image_shape": tuple(done[0].result.shape),
+    }
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# LM serving: batched prefill + greedy decode
+# ---------------------------------------------------------------------------
+
+
+def serve_lm(args) -> dict:
+    cfg = get_lm_config(args.arch, "smoke")
+    adapter = get_adapter(cfg)
+    params = adapter.init(jax.random.key(args.seed))
+
+    b = args.batch
+    prompt_len = args.prompt_len
+    max_len = prompt_len + args.gen_len
+
+    @jax.jit
+    def prefill(params, tokens):
+        logits, _ = adapter.forward(params, tokens)
+        return jnp.argmax(logits[:, -1, ...], axis=-1)
+
+    decode = jax.jit(adapter.decode)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(rid=i, payload=rng.integers(0, cfg.vocab_size, size=(prompt_len,)).astype(np.int32))
+        for i in range(args.requests)
+    ]
+
+    done: list[Request] = []
+    t_start = time.perf_counter()
+    for group in pack_batches(reqs, b):
+        toks = np.stack([g.payload for g in group] + [group[-1].payload] * (b - len(group)))
+        toks = jnp.asarray(toks)
+        nxt = prefill(params, toks)
+        if nxt.ndim > 1:  # multi-codebook heads: greedy over codebook 0
+            nxt = nxt[..., 0]
+        cache = adapter.init_cache(b, max_len)
+        # warm the cache with the prompt (teacher-forced decode steps)
+        for pos in range(prompt_len):
+            _, cache = decode(params, cache, toks[:, pos], jnp.asarray(pos, jnp.int32))
+        outs = [nxt]
+        for i in range(args.gen_len - 1):
+            logits, cache = decode(params, cache, nxt.astype(jnp.int32), jnp.asarray(prompt_len + i, jnp.int32))
+            nxt = jnp.argmax(logits, axis=-1)
+            if nxt.ndim > 1:
+                nxt = nxt[..., 0]
+            outs.append(nxt)
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)
+        now = time.perf_counter()
+        for lane, g in enumerate(group):
+            g.result = gen[lane]
+            g.completed = now
+            done.append(g)
+    wall = time.perf_counter() - t_start
+
+    lat = [r.latency for r in done]
+    total_tokens = len(done) * args.gen_len
+    return {
+        "mode": "lm",
+        "arch": args.arch,
+        "requests": len(done),
+        "wall_s": round(wall, 3),
+        "tok_s": round(total_tokens / wall, 1),
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 3),
+        "gen_shape": tuple(done[0].result.shape),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["diffusion", "lm"], default="diffusion")
+    ap.add_argument("--unet", default="sd_toy")
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-1b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--timesteps", type=int, default=20)
+    ap.add_argument("--pas", action="store_true", help="serve with phase-aware sampling")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    stats = serve_diffusion(args) if args.mode == "diffusion" else serve_lm(args)
+    print(f"[serve] {stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns everything ``dryrun.py`` needs to lower a cell
+without allocating a single device buffer: abstract args, in/out
+shardings, and the step function.  The same builders drive the real
+launchers (train.py / serve.py) with concrete arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import sharding as _sh
+from repro.common.sharding import batch_axes, tp_size
+from repro.common.types import LMConfig, ShapeCell
+from repro.launch import steps as S
+from repro.optim import AdamWConfig, init_adamw
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    name: str
+    step_fn: Callable
+    args: tuple  # abstract (ShapeDtypeStruct) args
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfConfig:
+    """Beyond-paper performance knobs (EXPERIMENTS.md §Perf).
+
+    Defaults are the paper-faithful baseline; ``optimized()`` is the
+    hillclimbed configuration.
+    """
+
+    chunked_ce: int = 0  # S-chunk size for the train loss; 0 = plain CE
+    infer_fsdp: str = "on"  # "on" | "off" | "auto": ZeRO-3 weights at inference
+    decode_seq_shard: bool = False  # shard KV-cache sequence over the model axis
+    infer_fsdp_budget: int = 8 * 2**30  # "auto": max per-device weight bytes
+    # prefill: gather only k/v, q stays seq-sharded.  REFUTED in §Perf —
+    # GSPMD then reshards the (4x wider) q tensor instead; kept as a knob
+    # for the record, off in optimized().
+    gqa_prefill_kv_gather: bool = False
+
+    @staticmethod
+    def optimized() -> "PerfConfig":
+        return PerfConfig(chunked_ce=512, infer_fsdp="auto", decode_seq_shard=True)
+
+
+def _shard(mesh: Mesh, tree_of_pspecs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _frontend_dim(cfg: LMConfig) -> int | None:
+    return cfg.d_model if cfg.frontend_stub else None
+
+
+def _logits_spec(cfg: LMConfig, batch_spec_axes, ms: int) -> P:
+    vocab = "model" if cfg.vocab_size % ms == 0 else None
+    if cfg.n_codebooks > 1:
+        return P(batch_spec_axes, None, vocab)
+    return P(batch_spec_axes, vocab)
+
+
+def params_struct(adapter: S.ArchAdapter):
+    return jax.eval_shape(adapter.init, jax.random.PRNGKey(0))
+
+
+def input_specs(
+    cfg: LMConfig,
+    cell: ShapeCell,
+    mesh: Mesh,
+    opt_cfg: AdamWConfig | None = None,
+    perf: PerfConfig | None = None,
+) -> CellSpec:
+    perf = perf or PerfConfig()
+    adapter = S.get_adapter(cfg)
+    ms = tp_size(mesh)
+    ba = batch_axes(mesh)
+    b, s = cell.global_batch, cell.seq_len
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+    # long-context single-sequence cells can't shard the batch
+    batch_spec_axes = ba if b % dp == 0 and b >= dp else None
+
+    # prefill attention layout: gather only the (narrow, GQA) k/v heads
+    # over the model axis; q stays sequence-sharded
+    _sh.set_attn_kv_gather(perf.gqa_prefill_kv_gather and cell.kind == "prefill")
+
+    # inference weight layout: drop the ZeRO-3 axis when the TP-sharded
+    # weights fit per-device HBM (kills per-layer weight all-gathers)
+    fsdp: str | None = "data"
+    if cell.kind != "train":
+        if perf.infer_fsdp == "off":
+            fsdp = None
+        elif perf.infer_fsdp == "auto":
+            per_dev = 2 * cfg.param_count() // ms  # bf16 TP-sharded
+            fsdp = None if per_dev <= perf.infer_fsdp_budget else "data"
+
+    pspecs = adapter.pspecs(ms, fsdp)
+    p_struct = params_struct(adapter)
+    p_shard = _shard(mesh, pspecs)
+    dt = jnp.dtype(cfg.dtype)
+
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_struct = jax.eval_shape(init_adamw, p_struct)
+        opt_shard = _shard(mesh, S.opt_pspecs(pspecs))
+        if adapter.takes_embeddings:
+            inputs = _sds((b, s, cfg.d_model), dt)
+            in_spec = P(batch_spec_axes, None, None)
+        else:
+            inputs = _sds((b, s), jnp.int32)
+            in_spec = P(batch_spec_axes, None)
+        if cfg.n_codebooks > 1:
+            labels = _sds((b, s, cfg.n_codebooks), jnp.int32)
+            lab_spec = P(batch_spec_axes, None, None)
+        else:
+            labels = _sds((b, s), jnp.int32)
+            lab_spec = P(batch_spec_axes, None)
+        batch = {"inputs": inputs, "labels": labels}
+        batch_shard = {
+            "inputs": NamedSharding(mesh, in_spec),
+            "labels": NamedSharding(mesh, lab_spec),
+        }
+        step = S.make_train_step(adapter, opt_cfg, chunked_ce=perf.chunked_ce)
+        return CellSpec(
+            name=f"{cfg.name}:{cell.name}",
+            step_fn=step,
+            args=(p_struct, opt_struct, batch),
+            in_shardings=(p_shard, opt_shard, batch_shard),
+            out_shardings=(p_shard, opt_shard, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+
+    if cell.kind == "prefill":
+        if adapter.takes_embeddings:
+            inputs = _sds((b, s, cfg.d_model), dt)
+            in_spec = P(batch_spec_axes, None, None)
+        else:
+            inputs = _sds((b, s), jnp.int32)
+            in_spec = P(batch_spec_axes, None)
+        step = S.make_prefill_step(adapter)
+        return CellSpec(
+            name=f"{cfg.name}:{cell.name}",
+            step_fn=step,
+            args=(p_struct, inputs),
+            in_shardings=(p_shard, NamedSharding(mesh, in_spec)),
+            out_shardings=NamedSharding(mesh, _logits_spec(cfg, batch_spec_axes, ms)),
+        )
+
+    # decode: one new token against a seq_len-deep cache / recurrent state.
+    # Baseline shards the cache sequence only for unbatchable long-context
+    # cells; the optimized layout always seq-shards global-layer caches over
+    # the model axis (flash-decoding style — softmax/contraction reductions
+    # become small all-reduces instead of cache-sized all-gathers).
+    seq_axis = "data" if batch_spec_axes is None else None
+    if perf.decode_seq_shard and seq_axis is None and s % ms == 0:
+        seq_axis = "model"
+    cache_struct = jax.eval_shape(lambda: adapter.init_cache(b, s))
+    cache_shard = _shard(mesh, adapter.cache_pspecs(batch_spec_axes or (), seq_axis, ms))
+    if adapter.takes_embeddings:
+        token = _sds((b, cfg.d_model), dt)
+        tok_spec = P(batch_spec_axes, None)
+    else:
+        token = _sds((b,), jnp.int32)
+        tok_spec = P(batch_spec_axes)
+    pos = _sds((), jnp.int32)
+    step = S.make_decode_step(adapter)
+    return CellSpec(
+        name=f"{cfg.name}:{cell.name}",
+        step_fn=step,
+        args=(p_struct, cache_struct, token, pos),
+        in_shardings=(p_shard, cache_shard, NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())),
+        out_shardings=(
+            NamedSharding(mesh, _logits_spec(cfg, batch_spec_axes, ms)),
+            cache_shard,
+        ),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,238 @@
+"""Arch adapters: uniform (init, forward, prefill, decode, pspecs) surface
+over the three model families, plus the jittable train/serve step builders
+shared by the trainer, the server, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import sharding as _sh
+from repro.common.types import LMConfig
+from repro.models import hymba as HY
+from repro.models import transformer as T
+from repro.models import xlstm as X
+from repro.optim import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchAdapter:
+    cfg: LMConfig
+    init: Callable[[jax.Array], Params]
+    forward: Callable[..., tuple[jax.Array, jax.Array]]  # (params, inputs, remat)
+    decode: Callable[..., tuple[jax.Array, Any]]  # (params, cache, token, pos)
+    init_cache: Callable[..., Any]  # (batch, max_len)
+    pspecs: Callable[[int], Any]
+    cache_pspecs: Callable[..., Any]  # (batch_axes, seq_axis, model_size)
+    # backbone/head split for the never-materialize-logits train loss
+    forward_hidden: Callable[..., tuple[jax.Array, jax.Array]] | None = None
+    head_logits: Callable[..., jax.Array] | None = None  # (params, h_chunk)
+
+    @property
+    def takes_embeddings(self) -> bool:
+        return self.cfg.frontend_stub is not None
+
+
+def get_adapter(cfg: LMConfig) -> ArchAdapter:
+    if cfg.family == "ssm":
+        return ArchAdapter(
+            cfg=cfg,
+            init=lambda key: X.init_xlstm(key, cfg),
+            forward=lambda p, x, remat=False: X.xlstm_forward(cfg, p, x, remat=remat),
+            decode=lambda p, c, tok, pos: X.xlstm_decode(cfg, p, c, tok, pos),
+            init_cache=lambda batch, max_len: X.init_state(cfg, batch),
+            pspecs=lambda ms, fsdp="data": X.xlstm_pspecs(cfg, ms, fsdp),
+            cache_pspecs=lambda ba, sa, ms: X.state_pspecs(cfg, ba, ms),
+            forward_hidden=lambda p, x, remat=False: X.xlstm_forward_hidden(cfg, p, x, remat=remat),
+            head_logits=lambda p, h: X.xlstm_head_logits(cfg, p, h),
+        )
+    if cfg.family == "hybrid":
+        return ArchAdapter(
+            cfg=cfg,
+            init=lambda key: HY.init_hymba(key, cfg),
+            forward=lambda p, x, remat=False: HY.hymba_forward(cfg, p, x, remat=remat),
+            decode=lambda p, c, tok, pos: HY.hymba_decode(cfg, p, c, tok, pos),
+            init_cache=lambda batch, max_len: HY.init_cache(cfg, batch, max_len),
+            pspecs=lambda ms, fsdp="data": HY.hymba_pspecs(cfg, ms, fsdp),
+            cache_pspecs=lambda ba, sa, ms: HY.cache_pspecs(cfg, ba, ms),
+            forward_hidden=lambda p, x, remat=False: HY.hymba_forward_hidden(cfg, p, x, remat=remat),
+            head_logits=lambda p, h: HY.hymba_head_logits(cfg, p, h),
+        )
+    return ArchAdapter(
+        cfg=cfg,
+        init=lambda key: T.init_lm(key, cfg),
+        forward=lambda p, x, remat=False: T.lm_forward(cfg, p, x, remat=remat),
+        decode=lambda p, c, tok, pos: T.lm_decode(cfg, p, c, tok, pos),
+        init_cache=lambda batch, max_len: T.init_cache(cfg, batch, max_len),
+        pspecs=lambda ms, fsdp="data": T.lm_pspecs(cfg, ms, fsdp),
+        cache_pspecs=lambda ba, sa, ms: T.cache_pspecs(cfg, ba, sa, ms),
+        forward_hidden=lambda p, x, remat=False: T.lm_forward_hidden(cfg, p, x, remat=remat),
+        head_logits=lambda p, h: T.lm_head_logits(cfg, p, h),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [..., V] fp-any; labels [...] int. Mean NLL in fp32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def cross_entropy_chunked(logits: jax.Array, labels: jax.Array, chunk: int = 256) -> jax.Array:
+    """Sequence-chunked NLL: identical math to :func:`cross_entropy` but the
+    fp32 ``logsumexp`` intermediates only ever exist for one S-chunk.
+
+    For a [B, S, V] logits tensor the plain path materializes ~3 fp32
+    copies of it (exp, lse broadcast, softmax in bwd) — at vocab 256k and
+    S=4096 that is the dominant train-step live-memory term.  Scanning
+    S-chunks caps the fp32 working set at B*chunk*V and lets XLA free each
+    chunk before the next (bwd recomputes per chunk under remat).
+    """
+    s = labels.shape[1]
+    if s % chunk or s <= chunk:
+        return cross_entropy(logits, labels)
+    n = s // chunk
+    # [B, S, ...] -> [n, B, chunk, ...] scan slices
+    lg = jnp.moveaxis(
+        logits.reshape(logits.shape[0], n, chunk, *logits.shape[2:]), 1, 0
+    )
+    lb = jnp.moveaxis(labels.reshape(labels.shape[0], n, chunk, *labels.shape[2:]), 1, 0)
+
+    # the reshape erases GSPMD's inferred sharding — without re-pinning,
+    # XLA replicates the vocab dim and the fp32 chunks blow past HBM
+    mesh = _sh.get_activation_mesh()
+    if mesh is not None:
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = 1
+        for a in ba:
+            dp *= mesh.shape[a]
+        b_ax = ba if lg.shape[1] % dp == 0 and lg.shape[1] >= dp else None
+        ms = mesh.shape.get("model", 1)
+        v_ax = "model" if lg.shape[-1] % ms == 0 else None
+        dims = [None, b_ax, None] + [None] * (lg.ndim - 4) + [v_ax]
+        lg = jax.lax.with_sharding_constraint(
+            lg, jax.sharding.NamedSharding(mesh, P(*dims))
+        )
+
+    def body(acc, xs):
+        lgc, lbc = xs
+        lf = lgc.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, lbc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32), (lg, lb))
+    return total / labels.size
+
+
+def cross_entropy_from_hidden(
+    adapter: "ArchAdapter", params: Params, h: jax.Array, labels: jax.Array, chunk: int
+) -> jax.Array:
+    """Chunked loss head: project S-chunks of the hidden states to logits
+    one at a time, so the [B, S, V] logits tensor never materializes —
+    neither in bf16 nor in the fp32 copies XLA fuses over it (softcap
+    tanh, logsumexp).  Exact same math as plain CE; bwd recomputes the
+    head per chunk under ``jax.checkpoint``."""
+    b, s, d = h.shape
+    if s % chunk or s <= chunk:
+        return cross_entropy(adapter.head_logits(params, h), labels)
+    n = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(b, n, chunk, *labels.shape[2:]), 1, 0)
+
+    mesh = _sh.get_activation_mesh()
+    if mesh is not None:
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = 1
+        for a in ba:
+            dp *= mesh.shape[a]
+        b_ax = ba if b % dp == 0 and b >= dp else None
+        hc = jax.lax.with_sharding_constraint(
+            hc, jax.sharding.NamedSharding(mesh, P(None, b_ax, None, None))
+        )
+
+    def body(acc, xs):
+        h_c, lb_c = xs
+        logits = adapter.head_logits(params, h_c)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, lb_c[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32), (hc, lb))
+    return total / labels.size
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    adapter: ArchAdapter,
+    opt_cfg: AdamWConfig,
+    *,
+    remat: bool = True,
+    chunked_ce: int = 0,  # 0 = plain CE; >0 = S-chunk size (perf knob)
+):
+    cfg = adapter.cfg
+
+    def train_step(params: Params, opt: AdamWState, batch: dict) -> tuple[Params, AdamWState, jax.Array]:
+        def loss_fn(p):
+            inputs = batch["inputs"]
+            labels = batch["labels"]
+            if chunked_ce and adapter.forward_hidden is not None:
+                h, aux = adapter.forward_hidden(p, inputs, remat=remat)
+                loss = cross_entropy_from_hidden(adapter, p, h, labels, chunked_ce)
+            else:
+                logits, aux = adapter.forward(p, inputs, remat=remat)
+                loss = cross_entropy(logits, labels)
+            return loss + 1e-2 * aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, loss
+
+    return train_step
+
+
+def make_prefill_step(adapter: ArchAdapter):
+    def prefill_step(params: Params, inputs: jax.Array) -> jax.Array:
+        logits, _ = adapter.forward(params, inputs)
+        last = logits[:, -1]
+        return last
+
+    return prefill_step
+
+
+def make_decode_step(adapter: ArchAdapter):
+    def serve_step(params: Params, cache: Any, token: jax.Array, pos: jax.Array):
+        return adapter.decode(params, cache, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Optimizer sharding mirrors the params
+# ---------------------------------------------------------------------------
+
+
+def opt_pspecs(param_specs: Any) -> AdamWState:
+    return AdamWState(
+        step=P(),
+        m=param_specs,
+        v=param_specs,
+    )

@@ -1,0 +1,1 @@
+"""Model zoo: generic LM transformer, xLSTM, Hymba, StableDiff U-Net, VAE."""

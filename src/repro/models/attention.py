@@ -1,0 +1,202 @@
+"""Attention for the LM substrate: GQA, RoPE, sliding windows, softcaps.
+
+Two execution paths:
+
+* ``attend`` — full-sequence attention with a query-chunked **online-softmax
+  scan** (the XLA-level expression of the paper's 2-stage streaming
+  computing, Eqs. 5-6).  Used by train/prefill.  Falls back to one-shot
+  attention for short sequences.
+* ``decode_attend`` — single-query attention against a KV cache (ring-buffer
+  for sliding-window layers, linear for global layers).
+
+The Pallas flash-attention kernel in ``repro.kernels.flash_attention``
+implements the same math with explicit VMEM tiling; it is validated against
+these functions and swapped in on TPU via ``use_pallas=True`` at the model
+level.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import AttnSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] (broadcastable)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    m = k_pos[None, :] <= q_pos[:, None]  # causal
+    if window > 0:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def attend(
+    q: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,  # [B, S, Hkv, Dh]
+    v: jax.Array,  # [B, S, Hkv, Dh]
+    spec: AttnSpec,
+    *,
+    attn_softcap: float = 0.0,
+    q_chunk: int = 0,  # 0 -> adaptive: cap the fp32 logits chunk at ~256 MiB
+) -> jax.Array:
+    if q_chunk == 0:
+        # transient fp32 logits are [B, H, q_chunk, S]; keep each chunk's
+        # share of the per-device peak bounded so long-sequence training
+        # fits HBM (the Pallas flash kernel subsumes this on real TPU)
+        s_len = q.shape[1]
+        q_chunk = max(128, min(1024, 2**21 // max(s_len, 1)))
+        while s_len % q_chunk:
+            q_chunk //= 2
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = dh ** -0.5
+    window = spec.window if spec.kind == "local" else 0
+
+    qh = (q * scale).reshape(b, s, hkv, rep, dh)
+    positions = jnp.arange(s)
+
+    if s <= q_chunk:
+        # preferred_element_type keeps q/k in bf16 on the wire (MXU-native
+        # mixed precision) — an input-side .astype(f32) would make XLA
+        # materialize f32 copies of q and k
+        logits = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qh, k, preferred_element_type=jnp.float32
+        )
+        logits = _softcap(logits, attn_softcap)
+        m = _mask(positions, positions, window)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+        return out.reshape(b, s, h, dh)
+
+    # --- query-chunked online softmax (2-stage streaming, Eqs. 5-6) -------
+    n_chunks = s // q_chunk
+    assert s % q_chunk == 0, f"seq {s} not divisible by q_chunk {q_chunk}"
+    qh_c = qh.reshape(b, n_chunks, q_chunk, hkv, rep, dh)
+    pos_c = positions.reshape(n_chunks, q_chunk)
+
+    @jax.checkpoint  # bwd recomputes each chunk: no stacked f32 residuals
+    def one_chunk(carry, inp):
+        qc, qpos = inp  # [B, C, Hkv, rep, Dh], [C]
+        logits = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qc, k, preferred_element_type=jnp.float32
+        )
+        logits = _softcap(logits, attn_softcap)
+        m = _mask(qpos, positions, window)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        oc = jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+        return carry, oc
+
+    _, out = jax.lax.scan(one_chunk, None, (jnp.moveaxis(qh_c, 1, 0), pos_c))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, dh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV caches
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer cache.  ``k``/``v``: [B, S_cache, Hkv, Dh].
+
+    For sliding-window layers ``S_cache == window`` and the buffer is a ring
+    indexed by ``pos % window``; for global layers ``S_cache == max_len``.
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+    @property
+    def length(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(
+    batch: int, max_len: int, n_kv: int, head_dim: int, spec: AttnSpec, dtype
+) -> KVCache:
+    s_cache = min(spec.window, max_len) if spec.kind == "local" else max_len
+    shape = (batch, s_cache, n_kv, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_positions(cache_len: int, pos: jax.Array, ring: bool) -> jax.Array:
+    """Absolute position stored at each cache slot (-ve => empty)."""
+    idx = jnp.arange(cache_len)
+    if not ring:
+        return jnp.where(idx <= pos, idx, -1)
+    # ring slot i holds the most recent position p <= pos with p % W == i
+    w = cache_len
+    p = pos - ((pos - idx) % w)
+    return jnp.where(p >= 0, p, -1)
+
+
+def decode_attend(
+    q: jax.Array,  # [B, 1, H, Dh] (already rotated)
+    k_new: jax.Array,  # [B, 1, Hkv, Dh] (already rotated)
+    v_new: jax.Array,
+    cache: KVCache,
+    pos: jax.Array,  # scalar int32: index of the new token
+    spec: AttnSpec,
+    *,
+    attn_softcap: float = 0.0,
+) -> tuple[jax.Array, KVCache]:
+    b, _, h, dh = q.shape
+    hkv = k_new.shape[2]
+    rep = h // hkv
+    ring = spec.kind == "local" and cache.length == spec.window
+    slot = jnp.mod(pos, cache.length) if ring else pos
+
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+
+    kpos = cache_positions(cache.length, pos, ring)
+    valid = kpos >= 0
+    if spec.kind == "local":
+        valid &= kpos > pos - spec.window
+    valid &= kpos <= pos
+
+    scale = dh ** -0.5
+    qh = (q * scale).reshape(b, 1, hkv, rep, dh)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k).astype(jnp.float32)
+    logits = _softcap(logits, attn_softcap)
+    logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v).reshape(b, 1, h, dh)
+    return out, KVCache(k=k, v=v)

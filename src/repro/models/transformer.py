@@ -1,0 +1,440 @@
+"""Generic decoder-only LM transformer covering the dense/moe/audio/vlm archs.
+
+Layer stacking uses a **pattern-unit scan**: the config's repeating layer
+pattern (e.g. gemma3's 5 local + 1 global) forms a unit; full units are
+stacked on a leading axis and consumed by one ``lax.scan`` (HLO size is
+O(unit), not O(depth)); the partial final repeat ("tail") is applied by a
+short Python loop.  This keeps 94-layer compiles cheap while preserving the
+exact layer ordering of the published models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.sharding import constrain_act, constrain_qkv, scan_unroll
+from repro.common.types import AttnSpec, LMConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.attention import KVCache
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer (slot) init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: LMConfig, spec: AttnSpec) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "norm1": L.init_norm(cfg, d),
+        "norm2": L.init_norm(cfg, d),
+        "attn": {
+            "wq": _dense_init(ks[0], (d, cfg.q_dim), dtype),
+            "wk": _dense_init(ks[1], (d, cfg.kv_dim), dtype),
+            "wv": _dense_init(ks[2], (d, cfg.kv_dim), dtype),
+            "wo": _dense_init(ks[3], (cfg.q_dim, d), dtype),
+        },
+    }
+    if cfg.qk_norm:
+        p["attn"]["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["attn"]["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    if cfg.post_norm:
+        p["norm1_post"] = L.init_norm(cfg, d)
+        p["norm2_post"] = L.init_norm(cfg, d)
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[4], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[4], cfg)
+    return p
+
+
+def _rms_head(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps) * scale
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply: full-sequence and single-token decode variants
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg: LMConfig, p: Params, h: jax.Array, positions: jax.Array):
+    b, s, _ = h.shape
+    q = (h @ p["attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ p["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ p["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = _rms_head(q, p["attn"]["q_norm"])
+        k = _rms_head(k, p["attn"]["k_norm"])
+    if cfg.use_rope:
+        q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def block_apply(cfg: LMConfig, p: Params, spec: AttnSpec, h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence block. h: [B, S, D]. Returns (h, moe_aux)."""
+    b, s, d = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = L.apply_norm(cfg, p["norm1"], h)
+    q, k, v = _qkv(cfg, p, x, positions)
+    q, k, v = constrain_qkv(q, k, v)
+    o = attn_lib.attend(q, k, v, spec, attn_softcap=cfg.attn_softcap)
+    o = o.reshape(b, s, cfg.q_dim) @ p["attn"]["wo"]
+    if cfg.post_norm:
+        o = L.apply_norm(cfg, p["norm1_post"], o)
+    h = h + o
+
+    x = L.apply_norm(cfg, p["norm2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = L.apply_moe(cfg, p["moe"], x)
+    else:
+        y = L.apply_mlp(cfg, p["mlp"], x)
+    if cfg.post_norm:
+        y = L.apply_norm(cfg, p["norm2_post"], y)
+    return h + y, aux
+
+
+def block_decode(
+    cfg: LMConfig, p: Params, spec: AttnSpec, h: jax.Array, cache: KVCache, pos: jax.Array
+) -> tuple[jax.Array, KVCache]:
+    """Single-token block. h: [B, 1, D]."""
+    b = h.shape[0]
+    positions = jnp.broadcast_to(pos[None], (b,))[:, None]  # [B, 1]
+    x = L.apply_norm(cfg, p["norm1"], h)
+    q, k, v = _qkv(cfg, p, x, positions)
+    o, cache = attn_lib.decode_attend(q, k, v, cache, pos, spec, attn_softcap=cfg.attn_softcap)
+    o = o.reshape(b, 1, cfg.q_dim) @ p["attn"]["wo"]
+    if cfg.post_norm:
+        o = L.apply_norm(cfg, p["norm1_post"], o)
+    h = h + o
+
+    x = L.apply_norm(cfg, p["norm2"], h)
+    if cfg.moe is not None:
+        y, _ = L.apply_moe(cfg, p["moe"], x)
+    else:
+        y = L.apply_mlp(cfg, p["mlp"], x)
+    if cfg.post_norm:
+        y = L.apply_norm(cfg, p["norm2_post"], y)
+    return h + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def _pattern_split(cfg: LMConfig) -> tuple[int, int]:
+    """(n_full_units, n_tail_slots)."""
+    u = len(cfg.pattern)
+    return cfg.n_layers // u, cfg.n_layers % u
+
+
+def init_lm(key, cfg: LMConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    n_units, n_tail = _pattern_split(cfg)
+    keys = jax.random.split(key, 4)
+
+    def unit_params(k):
+        sks = jax.random.split(k, len(cfg.pattern))
+        return {
+            f"slot{j}": _init_block(sks[j], cfg, spec)
+            for j, spec in enumerate(cfg.pattern)
+        }
+
+    # stack full units on a leading scan axis
+    unit_keys = jax.random.split(keys[0], max(n_units, 1))
+    blocks = jax.vmap(unit_params)(unit_keys[:n_units]) if n_units else {}
+
+    tail_keys = jax.random.split(keys[1], max(n_tail, 1))
+    tail = [
+        _init_block(tail_keys[j], cfg, cfg.pattern[j]) for j in range(n_tail)
+    ]
+
+    params: Params = {
+        "embed": _dense_init(keys[2], (cfg.vocab_size, cfg.d_model), dtype, scale=1.0),
+        "blocks": blocks,
+        "tail": tail,
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        heads = jax.random.split(keys[3], cfg.n_codebooks)
+        params["lm_head"] = jnp.stack(
+            [_dense_init(hk, (cfg.d_model, cfg.vocab_size), dtype) for hk in heads]
+        )  # [n_codebooks, D, V]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward paths
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(cfg: LMConfig, params: Params, inputs: jax.Array) -> jax.Array:
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        h = params["embed"][inputs]
+    else:  # frontend stub: precomputed frame/patch embeddings [B, S, D]
+        h = inputs.astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    return h
+
+
+def _logits_out(cfg: LMConfig, params: Params, h: jax.Array) -> jax.Array:
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+        logits = logits[..., None, :]  # [B, S, 1, V]
+    else:
+        logits = jnp.einsum("bsd,ndv->bsnv", h, params["lm_head"])
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.n_codebooks == 1:
+        logits = logits[..., 0, :]
+    return logits
+
+
+def lm_forward_hidden(
+    cfg: LMConfig, params: Params, inputs: jax.Array, *, remat: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Backbone only: final-normed hidden states [B, S, D] + moe aux.
+
+    Splitting the head off lets the train loss project S-chunks of ``h``
+    one at a time (``cross_entropy_chunked``-from-hidden) so the [B, S, V]
+    logits tensor — and the fp32 softcap/logsumexp copies XLA fuses over
+    it — never materialize.
+    """
+    n_units, n_tail = _pattern_split(cfg)
+    h = _embed_in(cfg, params, inputs)
+
+    def unit_fn(h, unit_p):
+        h = constrain_act(h)
+        aux = jnp.zeros((), jnp.float32)
+        for j, spec in enumerate(cfg.pattern):
+            h, a = block_apply(cfg, unit_p[f"slot{j}"], spec, h)
+            aux += a
+        return constrain_act(h), aux
+
+    if remat:
+        unit_fn = jax.checkpoint(unit_fn)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if n_units:
+        h, auxs = jax.lax.scan(
+            lambda c, p: unit_fn(c, p), h, params["blocks"], unroll=scan_unroll()
+        )
+        aux_total += jnp.sum(auxs)
+    for j in range(n_tail):
+        h, a = block_apply(cfg, params["tail"][j], cfg.pattern[j], h)
+        aux_total += a
+    return L.apply_norm(cfg, params["final_norm"], h), aux_total
+
+
+def lm_head_logits(cfg: LMConfig, params: Params, h: jax.Array) -> jax.Array:
+    """Project (already final-normed) hidden states to logits + softcap."""
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+        logits = logits[..., None, :]
+    else:
+        logits = jnp.einsum("bsd,ndv->bsnv", h, params["lm_head"])
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.n_codebooks == 1:
+        logits = logits[..., 0, :]
+    return logits
+
+
+def lm_forward(
+    cfg: LMConfig, params: Params, inputs: jax.Array, *, remat: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Full forward. Returns (logits [B,S,(N,)V], moe_aux_loss)."""
+    h, aux_total = lm_forward_hidden(cfg, params, inputs, remat=remat)
+    return lm_head_logits(cfg, params, h), aux_total
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Any:
+    """KV caches mirroring the block structure (stacked for scan)."""
+    dtype = jnp.dtype(cfg.dtype)
+    n_units, n_tail = _pattern_split(cfg)
+
+    def one(spec: AttnSpec) -> KVCache:
+        return attn_lib.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim, spec, dtype)
+
+    blocks = {
+        f"slot{j}": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), one(spec)
+        )
+        for j, spec in enumerate(cfg.pattern)
+    } if n_units else {}
+    tail = [one(cfg.pattern[j]) for j in range(n_tail)]
+    return {"blocks": blocks, "tail": tail}
+
+
+def lm_decode(
+    cfg: LMConfig, params: Params, cache: Any, token: jax.Array, pos: jax.Array
+) -> tuple[jax.Array, Any]:
+    """One decode step. token: [B] int32 (or [B, D] embedding), pos: scalar."""
+    n_units, n_tail = _pattern_split(cfg)
+    inputs = token[:, None] if token.ndim == 1 else token[:, None, :]
+    h = _embed_in(cfg, params, inputs)
+
+    def unit_fn(h, xs):
+        unit_p, unit_c = xs
+        new_c = {}
+        for j, spec in enumerate(cfg.pattern):
+            h, c = block_decode(cfg, unit_p[f"slot{j}"], spec, h, unit_c[f"slot{j}"], pos)
+            new_c[f"slot{j}"] = c
+        return h, new_c
+
+    new_cache: Any = {"blocks": {}, "tail": []}
+    if n_units:
+        h, new_blocks = jax.lax.scan(
+            unit_fn, h, (params["blocks"], cache["blocks"]), unroll=scan_unroll()
+        )
+        new_cache["blocks"] = new_blocks
+    for j in range(n_tail):
+        h, c = block_decode(cfg, params["tail"][j], cfg.pattern[j], h, cache["tail"][j], pos)
+        new_cache["tail"].append(c)
+    logits = _logits_out(cfg, params, h)[:, 0]
+    return logits, new_cache
+
+
+def lm_prefill(
+    cfg: LMConfig, params: Params, inputs: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Prefill: returns last-position logits only (serving semantics)."""
+    logits, _ = lm_forward(cfg, params, inputs)
+    return logits[:, -1], jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Partition specs
+# ---------------------------------------------------------------------------
+
+
+def _block_pspecs(cfg: LMConfig, model_size: int, fsdp_axis: str | None = "data") -> Params:
+    """2D weight sharding: TP dims over "model", the d_model dim over the
+    data axis (FSDP/ZeRO-3 — XLA all-gathers one layer's weights inside the
+    scan body, so per-device residency is P/(data*model))."""
+    fs = fsdp_axis
+
+    attn = {
+        "wq": P(fs, "model"),
+        "wk": P(fs, "model"),
+        "wv": P(fs, "model"),
+        "wo": P("model", fs),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = P(None)
+        attn["k_norm"] = P(None)
+    p: Params = {
+        "norm1": {"scale": P(None)},
+        "norm2": {"scale": P(None)},
+        "attn": attn,
+    }
+    if cfg.norm == "layernorm":
+        p["norm1"]["bias"] = P(None)
+        p["norm2"]["bias"] = P(None)
+    if cfg.post_norm:
+        p["norm1_post"] = dict(p["norm1"])
+        p["norm2_post"] = dict(p["norm2"])
+    if cfg.moe is not None:
+        ep = cfg.moe.num_experts % model_size == 0 and cfg.moe.shard_mode != "tp"
+        if cfg.moe.shard_mode == "ep" and not ep:
+            raise ValueError("EP requested but experts don't divide model axis")
+        if ep:
+            p["moe"] = {
+                "router": P(fs, None),
+                "w_in": P("model", fs, None),
+                "w_gate": P("model", fs, None),
+                "w_out": P("model", None, fs),
+            }
+        else:
+            p["moe"] = {
+                "router": P(fs, None),
+                "w_in": P(None, fs, "model"),
+                "w_gate": P(None, fs, "model"),
+                "w_out": P(None, "model", fs),
+            }
+    else:
+        p["mlp"] = {
+            "w_in": P(fs, "model"),
+            "w_out": P("model", fs),
+        }
+        if cfg.glu:
+            p["mlp"]["w_gate"] = P(fs, "model")
+    return p
+
+
+def lm_pspecs(cfg: LMConfig, model_size: int, fsdp_axis: str | None = "data") -> Params:
+    """Weight shardings.  ``fsdp_axis=None`` drops the ZeRO-3 dimension —
+    weights replicate over the data axes (inference-serving layout: no
+    per-layer weight all-gathers; only valid when TP-sharded params fit)."""
+    n_units, n_tail = _pattern_split(cfg)
+    bp = _block_pspecs(cfg, model_size, fsdp_axis)
+
+    def add_leading(tree):
+        return jax.tree.map(lambda s: P(None, *s), tree, is_leaf=lambda x: isinstance(x, P))
+
+    vocab_ok = cfg.vocab_size % model_size == 0
+    specs: Params = {
+        "embed": P("model" if vocab_ok else None, fsdp_axis),
+        "blocks": {f"slot{j}": add_leading(bp) for j in range(len(cfg.pattern))} if n_units else {},
+        "tail": [bp for _ in range(n_tail)],
+        "final_norm": {"scale": P(None)},
+    }
+    if cfg.norm == "layernorm":
+        specs["final_norm"]["bias"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, fsdp_axis, "model" if vocab_ok else None)
+    return specs
+
+
+def cache_pspecs(
+    cfg: LMConfig,
+    batch_axes: tuple[str, ...],
+    seq_axis: str | None,
+    model_size: int,
+) -> Any:
+    """Cache sharding: [B, S, Hkv, Dh].
+
+    Batch shards over the data axes; head_dim shards over "model" (KV head
+    counts like 1/4/5 never divide a 16-way model axis, but every assigned
+    head_dim does).  For long-context single-batch decode (``seq_axis``
+    set), the sequence axis of *global*-layer caches is sharded over "data"
+    instead of the batch.
+    """
+    n_units, n_tail = _pattern_split(cfg)
+    dh_axis = "model" if cfg.head_dim % model_size == 0 else None
+
+    def one(spec: AttnSpec, stacked: bool) -> Any:
+        seq = seq_axis if (spec.kind == "global" and seq_axis) else None
+        batch = batch_axes if batch_axes else None
+        # a mesh axis may appear only once per spec: when the sequence dim
+        # takes "model" (flash-decoding layout), head_dim replicates
+        dh = None if seq == "model" else dh_axis
+        s = P(batch, seq, None, dh)
+        if stacked:
+            s = P(None, *s)
+        return KVCache(k=s, v=s)
+
+    blocks = {
+        f"slot{j}": one(spec, True) for j, spec in enumerate(cfg.pattern)
+    } if n_units else {}
+    tail = [one(cfg.pattern[j], False) for j in range(n_tail)]
+    return {"blocks": blocks, "tail": tail}

@@ -1,0 +1,76 @@
+"""Small convolutional VAE: pixels <-> latents for the end-to-end example.
+
+The paper profiles the SD VAE as <1% of inference latency; here it exists
+so the example pipeline (text stub -> U-Net denoise -> VAE decode) is the
+full three-component StableDiff pipeline rather than a latents-only demo.
+Uses the same (L, C) layout + Uni-conv ops as the U-Net.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.unet import init_conv, init_gn, group_norm, uniconv_apply
+
+Params = dict[str, Any]
+
+
+def init_vae(key, *, img_channels: int = 3, latent_channels: int = 4, base: int = 32) -> Params:
+    ks = iter(jax.random.split(key, 16))
+    f = jnp.float32
+    return {
+        "enc": [
+            init_conv(next(ks), 3, img_channels, base, f),
+            init_conv(next(ks), 3, base, 2 * base, f),  # stride 2
+            init_conv(next(ks), 3, 2 * base, 2 * base, f),
+            init_conv(next(ks), 3, 2 * base, 2 * base, f),  # stride 2
+        ],
+        "enc_gn": init_gn(2 * base),
+        "enc_out": init_conv(next(ks), 1, 2 * base, 2 * latent_channels, f),
+        "dec_in": init_conv(next(ks), 1, latent_channels, 2 * base, f),
+        "dec": [
+            init_conv(next(ks), 3, 2 * base, 2 * base, f),
+            init_conv(next(ks), 3, 2 * base, 2 * base, f),  # after up x2
+            init_conv(next(ks), 3, 2 * base, base, f),  # after up x2
+        ],
+        "dec_gn": init_gn(base),
+        "dec_out": init_conv(next(ks), 3, base, img_channels, f),
+    }
+
+
+def _up2x(x: jax.Array, hw):
+    h, w = hw
+    x2 = x.reshape(x.shape[0], h, w, x.shape[-1])
+    x2 = jnp.repeat(jnp.repeat(x2, 2, axis=1), 2, axis=2)
+    return x2.reshape(x.shape[0], 4 * h * w, x.shape[-1]), (2 * h, 2 * w)
+
+
+def vae_encode(p: Params, img: jax.Array, hw) -> tuple[jax.Array, jax.Array]:
+    """img: [B, H*W, C]. Returns (mu, logvar) at H/4 x W/4."""
+    h = img
+    strides = [1, 2, 1, 2]
+    cur = hw
+    for conv, s in zip(p["enc"], strides):
+        h = uniconv_apply(conv["w"], conv["b"], h, cur, 3, stride=s)
+        if s == 2:
+            cur = (cur[0] // 2, cur[1] // 2)
+        h = jax.nn.silu(h)
+    h = group_norm(h, p["enc_gn"], 8)
+    out = uniconv_apply(p["enc_out"]["w"], p["enc_out"]["b"], h, cur, 1)
+    mu, logvar = jnp.split(out, 2, axis=-1)
+    return mu, logvar
+
+
+def vae_decode(p: Params, z: jax.Array, hw) -> jax.Array:
+    """z: [B, (H/4)*(W/4), Cz] -> image [B, H*W, C]."""
+    cur = hw
+    h = uniconv_apply(p["dec_in"]["w"], p["dec_in"]["b"], z, cur, 1)
+    h = jax.nn.silu(uniconv_apply(p["dec"][0]["w"], p["dec"][0]["b"], h, cur, 3))
+    h, cur = _up2x(h, cur)
+    h = jax.nn.silu(uniconv_apply(p["dec"][1]["w"], p["dec"][1]["b"], h, cur, 3))
+    h, cur = _up2x(h, cur)
+    h = jax.nn.silu(uniconv_apply(p["dec"][2]["w"], p["dec"][2]["b"], h, cur, 3))
+    h = group_norm(h, p["dec_gn"], 8)
+    return uniconv_apply(p["dec_out"]["w"], p["dec_out"]["b"], h, cur, 3)

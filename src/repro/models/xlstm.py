@@ -1,0 +1,303 @@
+"""xLSTM (mLSTM-block) language model.
+
+Implements the mLSTM recurrence with exponential gating and max-stabilizer
+(Beck et al., arXiv:2405.04517):
+
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    i_t = exp(i~_t - m_t);  f_t = exp(f~_t + m_{t-1} - m_t)
+    C_t = f_t C_{t-1} + i_t (v_t k_t^T)        (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Two execution forms that compute identical outputs:
+* ``chunk_size == 1`` — plain recurrent scan (the oracle; used by tests and
+  by single-token decode).
+* ``chunk_size > 1`` — **chunkwise-parallel** form: quadratic gated
+  attention inside a chunk + state carry between chunks.  This is the
+  production path (MXU-friendly matmuls instead of per-step outer
+  products); it mirrors how the paper's streaming idea maps to recurrent
+  archs (state characteristics carried across tiles).
+
+Note (DESIGN.md §Arch-applicability): the 350m config interleaves sLSTM
+blocks; sLSTM has no parallel form and contributes <15% of params, so this
+repro uses mLSTM blocks throughout and records the deviation.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.sharding import constrain_act, scan_unroll
+from repro.common.types import LMConfig
+from repro.models import layers as L
+from repro.models.layers import _dense_init
+
+Params = dict[str, Any]
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, Dk, Dv]
+    n: jax.Array  # [B, H, Dk]
+    m: jax.Array  # [B, H]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _inner(cfg: LMConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def _init_block(key, cfg: LMConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    d, inner, h = cfg.d_model, _inner(cfg), cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.init_norm(cfg, d),
+        "wq": _dense_init(ks[0], (d, inner), dtype),
+        "wk": _dense_init(ks[1], (d, inner), dtype),
+        "wv": _dense_init(ks[2], (d, inner), dtype),
+        "w_igate": _dense_init(ks[3], (d, h), jnp.float32),
+        "w_fgate": _dense_init(ks[4], (d, h), jnp.float32),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),  # open forget gates at init
+        "b_igate": jnp.zeros((h,), jnp.float32),
+        "w_ogate": _dense_init(ks[5], (d, inner), dtype),
+        "w_down": _dense_init(ks[6], (inner, d), dtype),
+        "out_norm": L.init_norm(cfg, inner),
+    }
+
+
+def init_xlstm(key, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    return {
+        "embed": _dense_init(ks[1], (cfg.vocab_size, cfg.d_model), jnp.dtype(cfg.dtype), scale=1.0),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+        "lm_head": _dense_init(ks[2], (cfg.d_model, cfg.vocab_size), jnp.dtype(cfg.dtype)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_chunk(q, k, v, ig, fg, state: MLSTMState):
+    """One chunk. q,k,v: [B, H, C, Dh]; ig,fg: [B, H, C] (raw logits)."""
+    b, h, cn, dh = q.shape
+    logf = jax.nn.log_sigmoid(fg)  # [B,H,C]
+    bcum = jnp.cumsum(logf, axis=-1)  # cumulative log-forget within chunk
+
+    # stabilizer: candidate maxima from inter (m_prev + bcum) and intra terms
+    intra_log = bcum[..., :, None] - bcum[..., None, :] + ig[..., None, :]  # [B,H,C,C]
+    tri = jnp.tril(jnp.ones((cn, cn), bool))
+    intra_log = jnp.where(tri, intra_log, -jnp.inf)
+    m_intra = jnp.max(intra_log, axis=-1)  # [B,H,C]
+    m_t = jnp.maximum(state.m[..., None] + bcum, m_intra)  # [B,H,C]
+
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # intra-chunk gated attention
+    s_mat = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * jnp.exp(intra_log - m_t[..., None])
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", s_mat, vf)
+    n_intra = jnp.einsum("bhts,bhsd->bhtd", jnp.exp(intra_log - m_t[..., None]), kf)
+
+    # inter-chunk contribution from carried state
+    decay_in = jnp.exp(state.m[..., None] + bcum - m_t)  # [B,H,C]
+    h_inter = jnp.einsum("bhtd,bhde->bhte", qf, state.c) * decay_in[..., None]
+    n_inter = state.n[:, :, None, :] * decay_in[..., None]
+
+    n_t = n_intra + n_inter
+    h_num = h_intra + h_inter
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_t, qf)), jnp.exp(-m_t)
+    )
+    out = h_num / denom[..., None]
+
+    # end-of-chunk state update
+    m_end = jnp.maximum(state.m + bcum[..., -1], jnp.max(intra_log[..., -1, :] + 0.0, axis=-1))
+    # recompute end-state in the m_end frame
+    w_end = jnp.exp(bcum[..., -1:] - bcum + ig - m_end[..., None])  # [B,H,C]
+    c_new = jnp.exp(state.m + bcum[..., -1] - m_end)[..., None, None] * state.c + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", w_end, kf, vf
+    )
+    n_new = jnp.exp(state.m + bcum[..., -1] - m_end)[..., None] * state.n + jnp.einsum(
+        "bhs,bhsd->bhd", w_end, kf
+    )
+    return out, MLSTMState(c=c_new, n=n_new, m=m_end)
+
+
+def mlstm_sequence(q, k, v, ig, fg, state: MLSTMState, chunk_size: int):
+    """q,k,v: [B, H, S, Dh]; ig/fg: [B, H, S]. Returns ([B,H,S,Dh], state)."""
+    b, h, s, dh = q.shape
+    cn = min(chunk_size, s)
+    assert s % cn == 0, f"seq {s} % chunk {cn}"
+    nc = s // cn
+
+    def step(st, xs):
+        qc, kc, vc, igc, fgc = xs
+        out, st = _mlstm_chunk(qc, kc, vc, igc, fgc, st)
+        return st, out
+
+    xs = tuple(
+        jnp.moveaxis(x.reshape(b, h, nc, cn, *x.shape[3:]), 2, 0)
+        for x in (q, k, v, ig, fg)
+    )
+    state, outs = jax.lax.scan(step, state, xs)
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dh)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# block / model forward
+# ---------------------------------------------------------------------------
+
+
+def _block_qkvg(cfg: LMConfig, p: Params, x: jax.Array):
+    b, s, _ = x.shape
+    h, inner = cfg.n_heads, _inner(cfg)
+    dh = inner // h
+    z = L.apply_norm(cfg, p["norm"], x)
+
+    def heads(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # [B,H,S,Dh]
+
+    q, k, v = heads(z @ p["wq"]), heads(z @ p["wk"]), heads(z @ p["wv"])
+    zf = z.astype(jnp.float32)
+    ig = (zf @ p["w_igate"] + p["b_igate"]).transpose(0, 2, 1)  # [B,H,S]
+    fg = (zf @ p["w_fgate"] + p["b_fgate"]).transpose(0, 2, 1)
+    gate = jax.nn.silu(z @ p["w_ogate"])
+    return z, q, k, v, ig, fg, gate
+
+
+def block_apply(cfg: LMConfig, p: Params, x: jax.Array, chunk_size: int):
+    b, s, d = x.shape
+    h, inner = cfg.n_heads, _inner(cfg)
+    dh = inner // h
+    z, q, k, v, ig, fg, gate = _block_qkvg(cfg, p, x)
+    st0 = MLSTMState(
+        c=jnp.zeros((b, h, dh, dh), jnp.float32),
+        n=jnp.zeros((b, h, dh), jnp.float32),
+        m=jnp.full((b, h), -1e30, jnp.float32),
+    )
+    out, _ = mlstm_sequence(q, k, v, ig, fg, st0, chunk_size)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, inner).astype(x.dtype)
+    out = L.apply_norm(cfg, p["out_norm"], out) * gate
+    return x + out @ p["w_down"]
+
+
+def block_decode(cfg: LMConfig, p: Params, x: jax.Array, state: MLSTMState):
+    """x: [B, 1, D]."""
+    out, state = _block_step_inner(cfg, p, x, state)
+    return out, state
+
+
+def _block_step_inner(cfg: LMConfig, p: Params, x, state):
+    b = x.shape[0]
+    h, inner = cfg.n_heads, _inner(cfg)
+    dh = inner // h
+    z, q, k, v, ig, fg, gate = _block_qkvg(cfg, p, x)
+    out, state = _mlstm_chunk(q, k, v, ig, fg, state)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, inner).astype(x.dtype)
+    out = L.apply_norm(cfg, p["out_norm"], out) * gate
+    return x + out @ p["w_down"], state
+
+
+def xlstm_forward_hidden(cfg: LMConfig, params: Params, tokens: jax.Array, *, chunk_size: int = 256, remat: bool = False):
+    h = params["embed"][tokens] if tokens.dtype in (jnp.int32, jnp.int64) else tokens.astype(jnp.dtype(cfg.dtype))
+
+    def layer(hc, p):
+        hc = constrain_act(hc)
+        return constrain_act(block_apply(cfg, p, hc, chunk_size)), None
+
+    if remat:
+        layer = jax.checkpoint(layer)
+    h, _ = jax.lax.scan(layer, h, params["blocks"], unroll=scan_unroll())
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def xlstm_head_logits(cfg: LMConfig, params: Params, h: jax.Array) -> jax.Array:
+    return h @ params["lm_head"]
+
+
+def xlstm_forward(cfg: LMConfig, params: Params, tokens: jax.Array, *, chunk_size: int = 256, remat: bool = False):
+    h, aux = xlstm_forward_hidden(cfg, params, tokens, chunk_size=chunk_size, remat=remat)
+    return xlstm_head_logits(cfg, params, h), aux
+
+
+def init_state(cfg: LMConfig, batch: int) -> MLSTMState:
+    h, inner = cfg.n_heads, _inner(cfg)
+    dh = inner // h
+    return MLSTMState(
+        c=jnp.zeros((cfg.n_layers, batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((cfg.n_layers, batch, h, dh), jnp.float32),
+        m=jnp.full((cfg.n_layers, batch, h), -1e30, jnp.float32),
+    )
+
+
+def xlstm_decode(cfg: LMConfig, params: Params, state: MLSTMState, token: jax.Array, pos):
+    del pos  # recurrent model: position is implicit in the state
+    h = params["embed"][token][:, None, :] if token.ndim == 1 else token[:, None, :].astype(jnp.dtype(cfg.dtype))
+
+    def layer(hc, xs):
+        p, st = xs
+        hc, st = _block_step_inner(cfg, p, hc, st)
+        return hc, st
+
+    h, state = jax.lax.scan(layer, h, (params["blocks"], state), unroll=scan_unroll())
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return (h @ params["lm_head"])[:, 0], state
+
+
+# ---------------------------------------------------------------------------
+# partition specs
+# ---------------------------------------------------------------------------
+
+
+def xlstm_pspecs(cfg: LMConfig, model_size: int, fsdp_axis: str | None = "data") -> Params:
+    inner_ok = _inner(cfg) % model_size == 0
+    m = "model" if inner_ok else None
+    vocab_ok = cfg.vocab_size % model_size == 0
+    fs = fsdp_axis  # FSDP axis for the d_model dim (2D weight sharding)
+    blk = {
+        "norm": {"scale": P(None, None)},
+        "wq": P(None, fs, m),
+        "wk": P(None, fs, m),
+        "wv": P(None, fs, m),
+        "w_igate": P(None, fs, None),
+        "w_fgate": P(None, fs, None),
+        "b_fgate": P(None, None),
+        "b_igate": P(None, None),
+        "w_ogate": P(None, fs, m),
+        "w_down": P(None, m, fs),
+        "out_norm": {"scale": P(None, None)},
+    }
+    if cfg.norm == "layernorm":
+        blk["norm"]["bias"] = P(None, None)
+        blk["out_norm"]["bias"] = P(None, None)
+    return {
+        "embed": P("model" if vocab_ok else None, fs),
+        "blocks": blk,
+        "final_norm": {"scale": P(None)} | ({"bias": P(None)} if cfg.norm == "layernorm" else {}),
+        "lm_head": P(fs, "model" if vocab_ok else None),
+    }
+
+
+def state_pspecs(cfg: LMConfig, batch_axes: tuple[str, ...], model_size: int) -> MLSTMState:
+    b = batch_axes if batch_axes else None
+    return MLSTMState(
+        c=P(None, b, None, None, None),
+        n=P(None, b, None, None),
+        m=P(None, b, None),
+    )

@@ -1,0 +1,125 @@
+"""AdamW with mixed-precision policy and optional compressed gradient
+all-reduce (error-feedback int8) for bandwidth-limited data parallelism.
+
+Params may live in bf16; first/second moments are fp32; the update is
+computed in fp32 and cast back.  This is the memory layout the multi-pod
+dry-run budgets for (12 bytes/param for MoE giants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any  # fp32 pytree
+    v: Any  # fp32 pytree
+
+
+def init_adamw(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Any, grads: Any, state: AdamWState
+) -> tuple[Any, AdamWState]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback gradient compression (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+
+class CompressionState(NamedTuple):
+    error: Any  # fp32 residual pytree
+
+
+def init_compression(params: Any) -> CompressionState:
+    return CompressionState(error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_decompress(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Simulated int8 quantize->allreduce->dequantize with error feedback.
+
+    The quantization happens *before* the DP all-reduce (4x bytes saved on
+    the wire for fp32 grads); the residual is added back next step so the
+    optimizer sees an unbiased long-run gradient.
+    """
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def compressed_grads(grads: Any, comp: CompressionState) -> tuple[Any, CompressionState]:
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(comp.error)
+    pairs = [compress_decompress(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = tdef.unflatten([p[0] for p in pairs])
+    new_e = tdef.unflatten([p[1] for p in pairs])
+    return new_g, CompressionState(error=new_e)

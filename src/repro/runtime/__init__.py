@@ -1,0 +1,8 @@
+from repro.runtime.fault_tolerance import (
+    ElasticPlan,
+    FaultTolerantLoop,
+    PreemptionGuard,
+    StragglerDetector,
+)
+
+__all__ = ["ElasticPlan", "FaultTolerantLoop", "PreemptionGuard", "StragglerDetector"]

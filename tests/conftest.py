@@ -1,0 +1,18 @@
+"""Test fixtures. Tests see 1 CPU device (dryrun forces 512 in its own
+process); Pallas kernels run in interpret mode on CPU automatically."""
+import os
+
+# keep XLA single-threaded enough to not oversubscribe CI boxes
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

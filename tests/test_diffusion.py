@@ -1,0 +1,111 @@
+"""Diffusion substrate: schedules, q_sample, DDIM/PNDM steppers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import DiffusionConfig
+from repro.models import diffusion as D
+
+
+@pytest.fixture(scope="module")
+def sched():
+    return D.make_schedule(DiffusionConfig())
+
+
+def test_schedule_monotone(sched):
+    ab = np.asarray(sched.alphas_cumprod)
+    assert ab[0] > ab[-1]
+    assert ((ab[1:] - ab[:-1]) <= 1e-9).all(), "alpha_bar must be nonincreasing"
+    assert 0 < ab[-1] < ab[0] <= 1.0
+
+
+def test_sample_timesteps_descending():
+    cfg = DiffusionConfig(timesteps_sample=50)
+    ts = np.asarray(D.sample_timesteps(cfg))
+    assert len(ts) == 50
+    assert (np.diff(ts) < 0).all()
+    assert ts[0] < cfg.timesteps_train
+
+
+def test_q_sample_limits(sched):
+    x0 = jnp.ones((1, 16, 4))
+    eps = jax.random.normal(jax.random.key(0), x0.shape)
+    early = D.q_sample(sched, x0, jnp.array([0]), eps)
+    late = D.q_sample(sched, x0, jnp.array([999]), eps)
+    # t=0: mostly signal; t=T: mostly noise
+    assert float(jnp.abs(early - x0).mean()) < 0.3
+    corr = float(jnp.corrcoef(late.ravel(), eps.ravel())[0, 1])
+    assert corr > 0.95
+
+
+def test_ddim_recovers_x0_with_oracle_eps(sched):
+    """If the model predicts the exact eps used in q_sample, one DDIM step
+    t->-1 returns x0 exactly."""
+    x0 = jax.random.normal(jax.random.key(1), (1, 16, 4))
+    eps = jax.random.normal(jax.random.key(2), x0.shape)
+    t = jnp.array(700, jnp.int32)
+    x_t = D.q_sample(sched, x0, t[None], eps)
+    x_back = D.ddim_step(sched, x_t, eps, t, jnp.int32(-1))
+    np.testing.assert_allclose(np.asarray(x_back), np.asarray(x0), atol=1e-4)
+
+
+def test_ddim_chain_denoises(sched):
+    """Full DDIM chain with an oracle eps-model reduces distance to x0."""
+    cfg = DiffusionConfig(timesteps_sample=10)
+    ts = D.sample_timesteps(cfg)
+    x0 = jax.random.normal(jax.random.key(3), (1, 16, 4))
+    eps = jax.random.normal(jax.random.key(4), x0.shape)
+    x = D.q_sample(sched, x0, ts[0][None], eps)
+
+    for i in range(10):
+        tp = ts[i + 1] if i < 9 else jnp.int32(-1)
+        # oracle: infer the eps that maps x0 -> x at step ts[i]
+        ab = sched.alphas_cumprod[ts[i]]
+        eps_hat = (x - jnp.sqrt(ab) * x0) / jnp.sqrt(1 - ab)
+        x = D.ddim_step(sched, x, eps_hat, ts[i], tp)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x0), atol=1e-3)
+
+
+def test_pndm_warmup_matches_state_progression(sched):
+    """PNDM keeps a 4-deep eps history; after 4 steps it must switch to the
+    multistep path without NaNs and stay finite."""
+    cfg = DiffusionConfig(timesteps_sample=8, scheduler="pndm")
+    ts = D.sample_timesteps(cfg)
+    x = jax.random.normal(jax.random.key(5), (1, 16, 4))
+    st = D.pndm_init(x.shape, x.dtype)
+    for i in range(8):
+        tp = ts[i + 1] if i < 7 else jnp.int32(-1)
+        eps = jax.random.normal(jax.random.key(10 + i), x.shape) * 0.1
+        x, st = D.pndm_step(sched, st, x, eps, ts[i], tp)
+        assert bool(jnp.isfinite(x).all())
+    assert int(st.n_ets) == 4, "history counter saturates at ring depth"
+
+
+def test_pndm_first_step_equals_ddim(sched):
+    """Warmup step 1 of PLMS is plain DDIM (eps' = eps)."""
+    x = jax.random.normal(jax.random.key(6), (1, 16, 4))
+    eps = jax.random.normal(jax.random.key(7), x.shape) * 0.2
+    t, tp = jnp.int32(700), jnp.int32(650)
+    st = D.pndm_init(x.shape, x.dtype)
+    x_pndm, _ = D.pndm_step(sched, st, x, eps, t, tp)
+    x_ddim = D.ddim_step(sched, x, eps, t, tp)
+    np.testing.assert_allclose(np.asarray(x_pndm), np.asarray(x_ddim), atol=1e-6)
+
+
+def test_cfg_eps_guidance():
+    """cfg_eps batches [cond; uncond] through one eps_fn call and blends
+    e_u + g * (e_c - e_u)."""
+    def eps_fn(x2, t2, ctx2):
+        # conditional half returns 1, unconditional half returns 0
+        b2 = x2.shape[0]
+        flags = jnp.concatenate([jnp.ones(b2 // 2), jnp.zeros(b2 // 2)])
+        return jnp.broadcast_to(flags[:, None, None], x2.shape)
+
+    x = jnp.zeros((2, 4, 2))
+    t = jnp.zeros((2,), jnp.int32)
+    ctx = jnp.zeros((2, 3, 5))
+    out = D.cfg_eps(eps_fn, x, t, ctx, ctx, 7.5)
+    np.testing.assert_allclose(np.asarray(out), 7.5, atol=1e-6)
+    out1 = D.cfg_eps(eps_fn, x, t, ctx, ctx, 1.0)
+    np.testing.assert_allclose(np.asarray(out1), 1.0, atol=1e-6)

@@ -1,0 +1,87 @@
+"""Unit tests for the dry-run cost machinery: HLO collective parsing,
+wire-time model, unroll extrapolation algebra, and roofline bookkeeping.
+
+These run WITHOUT forcing 512 devices — they exercise the pure helpers.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.launch.dryrun import (  # noqa: E402
+    _n_scan_units,
+    collective_bytes_from_hlo,
+    collective_wire_seconds,
+)
+from repro.configs import get_lm_config  # noqa: E402
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+%r0 (a: f32[4]) -> f32[4] { ... }
+ENTRY %main {
+  %ag = bf16[16,4096]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256]
+  %ar.1 = f32[256,4096]{1,0} all-reduce(%x), channel_id=5, to_apply=%r0
+  %rs = bf16[8,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = s32[64]{0} all-to-all(%z)
+  %cp-start = bf16[2,2]{1,0} collective-permute-start(%w)
+  %ag2.start = (bf16[8], bf16[128]) all-gather-start(%q)
+  %not_coll = f32[10]{0} add(%a, %b), metadata={op_name="all-reduce-looking-name"}
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    got = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert got["all-gather"] == 16 * 4096 * 2 + 8 * 2 + 128 * 2  # incl. -start tuple
+    assert got["all-reduce"] == 256 * 4096 * 4
+    assert got["reduce-scatter"] == 8 * 128 * 2
+    assert got["all-to-all"] == 64 * 4
+    assert got["collective-permute"] == 2 * 2 * 2
+
+
+def test_collective_parser_ignores_lookalike_metadata():
+    got = collective_bytes_from_hlo(
+        '%x = f32[100]{0} add(%a, %b), metadata={op_name="my/all-reduce/path"}\n'
+    )
+    assert got == {}
+
+
+def test_wire_seconds_ring_factor():
+    t = collective_wire_seconds({"all-reduce": 100, "all-gather": 100}, link_bw=100.0)
+    assert abs(t - (2.0 * 1 + 1.0 * 1)) < 1e-12  # AR counts 2x
+
+
+def test_extrapolation_algebra():
+    """true = c1 + (n-1)(c2-c1) recovers C + n*B exactly from u=1/u=2."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        C, B, n = rng.uniform(0, 1e12), rng.uniform(0, 1e10), rng.integers(2, 100)
+        c1 = C + B
+        c2 = C + 2 * B
+        true = C + n * B
+        est = c1 + (n - 1) * (c2 - c1)
+        np.testing.assert_allclose(est, true, rtol=1e-12)
+
+
+def test_n_scan_units_per_family():
+    assert _n_scan_units(get_lm_config("yi-6b", "full")) == 32
+    assert _n_scan_units(get_lm_config("gemma2-9b", "full")) == 21  # 42 / (local,global)
+    assert _n_scan_units(get_lm_config("xlstm-350m", "full")) == 24
+    assert _n_scan_units(get_lm_config("hymba-1.5b", "full")) == 32
+    assert _n_scan_units(get_lm_config("gemma3-1b", "full")) == 4  # 26 // 6-slot pattern
+
+
+def test_perf_config_fsdp_auto_budget():
+    from repro.launch.specs import PerfConfig
+
+    pc = PerfConfig.optimized()
+    assert pc.chunked_ce > 0 and pc.decode_seq_shard
+    assert not pc.gqa_prefill_kv_gather  # refuted knob stays off
+    # auto rule: yi-6b bf16 TP-sharded over 16 fits an 8 GiB budget
+    cfg = get_lm_config("yi-6b", "full")
+    per_dev = 2 * cfg.param_count() // 16
+    assert per_dev <= pc.infer_fsdp_budget
+    # qwen3 (235B) does not -> keeps ZeRO-3 at inference
+    big = get_lm_config("qwen3-moe-235b-a22b", "full")
+    assert 2 * big.param_count() // 16 > pc.infer_fsdp_budget

@@ -1,0 +1,69 @@
+"""General optimization framework (Sec. III-C): search + validation."""
+import numpy as np
+
+from repro.common.types import PASPlan
+from repro.configs import get_unet_config
+from repro.core import framework as FW
+from repro.models import unet as U
+
+TOY = get_unet_config("sd_toy")
+N_UP = U.n_up_steps(TOY)
+
+
+def _cons(**kw):
+    base = dict(total_steps=50, d_star=20, n_outlier_blocks=2, min_quality=0.0)
+    base.update(kw)
+    return FW.SearchConstraints(**base)
+
+
+def test_search_respects_constraints():
+    cons = _cons()
+    sols = FW.search_plans(TOY, cons)
+    assert sols, "search must find feasible plans"
+    for s in sols:
+        p = s.plan
+        assert p.t_sketch >= cons.d_star
+        assert p.l_refine >= cons.n_outlier_blocks
+        assert p.l_sketch >= p.l_refine
+        assert p.t_complete <= p.t_sketch
+        assert s.mac_reduction >= 1.0
+
+
+def test_search_sorted_by_reduction():
+    sols = FW.search_plans(TOY, _cons())
+    reds = [s.mac_reduction for s in sols]
+    assert reds == sorted(reds, reverse=True)
+
+
+def test_validate_filters_by_quality():
+    sols = FW.search_plans(TOY, _cons())[:6]
+    # fake evaluator: quality inversely proportional to reduction
+    evaluate = lambda plan: 1.0 / FW.mac_reduction(TOY, plan, 50)
+    thresh = 0.45
+    valid = FW.validate_solutions(sols, evaluate, thresh)
+    for s in valid:
+        assert s.quality >= thresh
+        assert s.valid
+    # every returned plan is quality-checked, none above max reduction bound
+    rejected = [s for s in sols if s.quality is not None and not s.valid]
+    for s in rejected:
+        assert s.quality < thresh
+
+
+def test_stricter_outlier_floor_lowers_reduction():
+    loose = FW.search_plans(TOY, _cons(n_outlier_blocks=1))
+    tight = FW.search_plans(TOY, _cons(n_outlier_blocks=4))
+    assert loose[0].mac_reduction >= tight[0].mac_reduction
+
+
+def test_paper_table2_magnitude():
+    """PAS-25/x plans on a paper-shaped (SD v1.4-like) U-Net should land in
+    the paper's reported 2.7-3.3x MAC-reduction band."""
+    sd = get_unet_config("sd_v14")
+    reds = []
+    for t_sparse in (3, 4, 5):
+        plan = PASPlan(t_sketch=25, t_complete=4, t_sparse=t_sparse, l_sketch=2, l_refine=2)
+        reds.append(FW.mac_reduction(sd, plan, 50))
+    assert 2.0 < reds[0] < 3.5
+    assert reds == sorted(reds)
+    assert 2.5 < reds[1] < 4.0  # PAS-25/4: paper reports 2.84x

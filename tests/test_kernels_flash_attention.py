@@ -1,0 +1,72 @@
+"""Flash-attention Pallas kernel vs oracle: shapes/dtypes/feature sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _qkv(key, b, h, hkv, s, dh, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, h, s, dh), dtype)
+    k = jax.random.normal(k2, (b, hkv, s, dh), dtype)
+    v = jax.random.normal(k3, (b, hkv, s, dh), dtype)
+    return q, k, v
+
+
+CASES = [
+    # (b, h, hkv, s, dh, causal, window, softcap)
+    (1, 2, 2, 128, 64, True, 0, 0.0),
+    (2, 4, 2, 256, 64, True, 0, 0.0),     # GQA 2:1
+    (1, 8, 1, 128, 64, True, 0, 0.0),     # MQA
+    (1, 2, 2, 256, 64, False, 0, 0.0),    # non-causal
+    (1, 2, 2, 256, 64, True, 64, 0.0),    # sliding window
+    (1, 2, 2, 256, 64, True, 0, 50.0),    # gemma2 softcap
+    (1, 2, 2, 256, 128, True, 0, 0.0),    # wide head
+    (1, 2, 2, 192, 64, True, 0, 0.0),     # non-pow2 seq
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh,causal,window,softcap", CASES)
+def test_flash_matches_ref(b, h, hkv, s, dh, causal, window, softcap):
+    q, k, v = _qkv(jax.random.key(s + h), b, h, hkv, s, dh)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_block_shape_invariance():
+    q, k, v = _qkv(jax.random.key(9), 1, 2, 2, 256, 64)
+    a = flash_attention(q, k, v, block_q=64, block_k=64)
+    b = flash_attention(q, k, v, block_q=128, block_k=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(jax.random.key(10), 1, 2, 2, 128, 64, jnp.bfloat16)
+    got = flash_attention(q, k, v)
+    want = flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_causal_first_row_is_v0():
+    """Causal row 0 attends only to k0 -> output == v[:, :, 0]."""
+    q, k, v = _qkv(jax.random.key(11), 1, 2, 2, 128, 64)
+    out = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out[:, :, 0]), np.asarray(v[:, :, 0]), atol=1e-5
+    )
+
+
+def test_flash_window_equals_full_when_window_ge_seq():
+    q, k, v = _qkv(jax.random.key(12), 1, 2, 2, 128, 64)
+    a = flash_attention(q, k, v, causal=True, window=0)
+    b = flash_attention(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,69 @@
+"""Fused matmul + reconfigurable epilogue + streamed NCA stats kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_matmul.ops import fused_matmul
+from repro.kernels.fused_matmul.ref import fused_matmul_ref
+
+SHAPES = [(128, 256, 64), (256, 512, 256), (64, 64, 64), (96, 160, 224)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("epilogue", ["none", "bias", "gelu", "silu"])
+def test_fused_matmul_epilogues(m, k, n, epilogue):
+    a = jax.random.normal(jax.random.key(m + n), (m, k), jnp.float32) * 0.5
+    b = jax.random.normal(jax.random.key(k), (k, n), jnp.float32) * 0.1
+    bias = jax.random.normal(jax.random.key(7), (n,)) * 0.2
+    got, _ = fused_matmul(a, b, bias, epilogue=epilogue)
+    want, _ = fused_matmul_ref(a, b, bias, epilogue=epilogue)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_fused_matmul_nca_stats():
+    """The streamed (sum, square-sum) must equal the post-hoc statistics of
+    the output — the NCA half of 2-stage streaming computing (Sec. IV-C):
+    a following layernorm needs no extra pass over the data."""
+    a = jax.random.normal(jax.random.key(1), (128, 256)) * 0.5
+    b = jax.random.normal(jax.random.key(2), (256, 192)) * 0.1
+    out, stats = fused_matmul(a, b, epilogue="none", with_stats=True)
+    of = np.asarray(out, np.float32)
+    np.testing.assert_allclose(np.asarray(stats[0]), of.sum(-1), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(stats[1]), (of * of).sum(-1), rtol=1e-4, atol=1e-3)
+
+
+def test_nca_stats_enable_one_pass_layernorm():
+    """End-to-end 2-stage check: layernorm built ONLY from the streamed
+    stats equals layernorm recomputed from the full output tensor."""
+    a = jax.random.normal(jax.random.key(3), (64, 128))
+    b = jax.random.normal(jax.random.key(4), (128, 96)) * 0.1
+    out, stats = fused_matmul(a, b, with_stats=True)
+    n = out.shape[-1]
+    mean = stats[0] / n
+    var = stats[1] / n - mean**2
+    got = (np.asarray(out) - mean[:, None]) / np.sqrt(np.asarray(var)[:, None] + 1e-6)
+
+    of = np.asarray(out, np.float32)
+    want = (of - of.mean(-1, keepdims=True)) / np.sqrt(of.var(-1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_fused_matmul_block_invariance():
+    a = jax.random.normal(jax.random.key(5), (256, 512))
+    b = jax.random.normal(jax.random.key(6), (512, 256)) * 0.05
+    x, sx = fused_matmul(a, b, with_stats=True, block_m=64, block_n=64, block_k=128)
+    y, sy = fused_matmul(a, b, with_stats=True, block_m=256, block_n=256, block_k=512)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sx), np.asarray(sy), rtol=1e-4, atol=1e-3)
+
+
+def test_fused_matmul_bf16():
+    a = jax.random.normal(jax.random.key(8), (128, 128), jnp.bfloat16)
+    b = jax.random.normal(jax.random.key(9), (128, 128), jnp.bfloat16) * 0.1
+    got, _ = fused_matmul(a, b)
+    want = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), atol=0.15, rtol=0.05
+    )

@@ -1,0 +1,98 @@
+"""U-Net substrate: shapes, partial execution with entry features, and the
+feature-reuse exactness property behind PAS."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_unet_config
+from repro.models import unet as U
+
+TOY = get_unet_config("sd_toy")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = U.init_unet(jax.random.key(0), TOY)
+    b, L = 2, TOY.latent_size**2
+    x = jax.random.normal(jax.random.key(1), (b, L, TOY.in_channels))
+    t = jnp.array([10, 500])
+    ctx = jax.random.normal(jax.random.key(2), (b, TOY.ctx_len, TOY.ctx_dim)) * 0.3
+    return params, x, t, ctx
+
+
+def test_full_apply_shape(setup):
+    params, x, t, ctx = setup
+    eps, cap = U.unet_apply(TOY, params, x, t, ctx)
+    assert eps.shape == x.shape
+    assert bool(jnp.isfinite(eps).all())
+    assert cap == {}
+
+
+def test_capture_steps(setup):
+    params, x, t, ctx = setup
+    n_up = U.n_up_steps(TOY)
+    steps = (0, n_up - 1)
+    eps, cap = U.unet_apply(TOY, params, x, t, ctx, capture_steps=steps)
+    assert set(cap.keys()) == set(steps)
+    for v in cap.values():
+        assert v.ndim == 3 and bool(jnp.isfinite(v).all())
+
+
+@pytest.mark.parametrize("entry", [1, 3])
+def test_partial_run_with_true_features_matches_full(setup, entry):
+    """Feeding a partial U-Net the TRUE main-branch feature captured from a
+    full run must reproduce the full output exactly — the zero-error limit
+    of the paper's Fig. 5 reuse scheme (skips recompute only)."""
+    params, x, t, ctx = setup
+    full_eps, cap = U.unet_apply(TOY, params, x, t, ctx, capture_steps=(entry,))
+    part_eps, _ = U.unet_apply(
+        TOY, params, x, t, ctx, entry_step=entry, entry_feat=cap[entry]
+    )
+    np.testing.assert_allclose(
+        np.asarray(part_eps), np.asarray(full_eps), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_partial_run_costs_less_flops(setup):
+    params, x, t, ctx = setup
+    n_up = U.n_up_steps(TOY)
+    entry = n_up - 2
+
+    def full(x):
+        return U.unet_apply(TOY, params, x, t, ctx)[0]
+
+    feat = jnp.zeros((x.shape[0],) + _feat_shape(entry, x.shape[0])[1:], x.dtype)
+
+    def partial(x):
+        return U.unet_apply(TOY, params, x, t, ctx, entry_step=entry, entry_feat=feat)[0]
+
+    f_full = jax.jit(full).lower(x).compile().cost_analysis()
+    f_part = jax.jit(partial).lower(x).compile().cost_analysis()
+    if isinstance(f_full, list):
+        f_full, f_part = f_full[0], f_part[0]
+    assert f_part["flops"] < 0.8 * f_full["flops"]
+
+
+def _feat_shape(entry, b):
+    from repro.core.sampler import _feat_shape as fs
+    return fs(TOY, entry, b)
+
+
+def test_timestep_embedding_distinct():
+    e1 = U.timestep_embedding(jnp.array([1]), 128)
+    e2 = U.timestep_embedding(jnp.array([999]), 128)
+    assert float(jnp.abs(e1 - e2).max()) > 0.1
+
+
+def test_stride2_downsample_plan():
+    """The down plan halves resolution exactly n_levels-1 times."""
+    plan = U._down_plan(TOY)
+    n_down = sum(1 for (_, _, is_down) in plan if is_down)
+    assert n_down == TOY.n_levels - 1
+
+
+def test_paper_block_count_sd14():
+    sd = get_unet_config("sd_v14")
+    # paper Fig. 3/6: 12 down + 12 up blocks for SD v1.4 (l=13 with middle)
+    assert sd.n_skip_blocks == 12

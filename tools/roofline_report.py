@@ -1,0 +1,81 @@
+"""Aggregate results/dryrun JSONs into the EXPERIMENTS.md roofline table.
+
+Usage: python tools/roofline_report.py [results/dryrun] > table.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(fn))
+        r["_opt"] = fn.endswith("_opt.json")
+        rows.append(r)
+
+    sp = [r for r in rows if r.get("mesh") == "16x16" and not r["_opt"]]
+    mp = [r for r in rows if r.get("mesh") == "2x16x16" and not r["_opt"]]
+    opt = [r for r in rows if r["_opt"]]
+
+    print("### Single-pod (16x16 = 256 chips) roofline, per device\n")
+    print("| arch | cell | compute | memory | collective | bottleneck | "
+          "roofline frac | model/HLO FLOPs | HBM peak |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sp:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['cell']} | FAILED | | | | | | |")
+            continue
+        rf = r["roofline_s"]
+        bound = max(rf.values()) or 1
+        frac = rf["compute"] / bound
+        print(
+            f"| {r['arch']} | {r['cell']} | {fmt_s(rf['compute'])} | "
+            f"{fmt_s(rf['memory'])} | {fmt_s(rf['collective'])} | "
+            f"{r['bottleneck']} | {frac:.2f} | "
+            f"{r.get('model_flops_ratio', 0):.2f} | "
+            f"{r['memory']['peak_bytes']/2**30:.1f} GiB |"
+        )
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) compile proof\n")
+    print("| arch | cell | compile | HBM peak | status |")
+    print("|---|---|---|---|---|")
+    for r in mp:
+        if r.get("ok"):
+            print(f"| {r['arch']} | {r['cell']} | {r['compile_s']}s | "
+                  f"{r['memory']['peak_bytes']/2**30:.1f} GiB | OK |")
+        else:
+            print(f"| {r['arch']} | {r['cell']} | | | FAIL: {r.get('error','')[:60]} |")
+
+    if opt:
+        print("\n### Hillclimbed cells (PerfConfig.optimized), single-pod\n")
+        print("| arch | cell | compute | memory | collective | bottleneck | HBM peak |")
+        print("|---|---|---|---|---|---|---|")
+        for r in opt:
+            rf = r["roofline_s"]
+            print(
+                f"| {r['arch']} | {r['cell']} | {fmt_s(rf['compute'])} | "
+                f"{fmt_s(rf['memory'])} | {fmt_s(rf['collective'])} | "
+                f"{r['bottleneck']} | {r['memory']['peak_bytes']/2**30:.1f} GiB |"
+            )
+
+    ok = sum(1 for r in rows if r.get("ok"))
+    print(f"\n{ok}/{len(rows)} cells passed.")
+
+
+if __name__ == "__main__":
+    main()

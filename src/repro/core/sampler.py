@@ -44,6 +44,37 @@ def _entry_steps(ucfg: UNetConfig, plan: PASPlan) -> tuple[int, int]:
     return n_up - plan.l_sketch, n_up - plan.l_refine
 
 
+def cfg_unet_step(
+    ucfg: UNetConfig,
+    params: Params,
+    guidance: float,
+    x: jax.Array,  # [B, L, C]
+    t: jax.Array,  # scalar or [B] timesteps
+    ctx2: jax.Array,  # [2B, ctx_len, ctx_dim] = [cond; uncond]
+    *,
+    entry_step: int = 0,
+    entry_feat: jax.Array | None = None,  # [2B, ...] cached main-branch feature
+    capture: tuple[int, ...] = (),
+) -> tuple[jax.Array, dict[int, jax.Array]]:
+    """One classifier-free-guided U-Net invocation on the CFG-doubled batch.
+
+    Shared by the scan-based :func:`pas_denoise` (scalar ``t``) and the
+    serving engine's micro-step (per-lane ``t`` vector).  Returns the guided
+    eps prediction [B, L, C] and the captured main-branch features in the
+    [2B, ...] cond/uncond-stacked layout.
+    """
+    b = x.shape[0]
+    x2 = jnp.concatenate([x, x], axis=0)
+    tb = jnp.broadcast_to(t, (b,))
+    t2 = jnp.concatenate([tb, tb], axis=0)
+    eps2, cap = U.unet_apply(
+        ucfg, params, x2, t2, ctx2,
+        entry_step=entry_step, entry_feat=entry_feat, capture_steps=capture,
+    )
+    e_c, e_u = jnp.split(eps2, 2, axis=0)
+    return e_u + guidance * (e_c - e_u), cap
+
+
 def _feat_shape(ucfg: UNetConfig, entry_step: int, batch: int) -> tuple[int, ...]:
     """Shape of the main-branch feature entering ``entry_step``."""
     chans = [ucfg.base_channels * m for m in ucfg.channel_mult]
@@ -77,9 +108,11 @@ def pas_denoise(
     b2 = 2 * b
     guidance = dcfg.guidance_scale
 
+    # plan=None: all-full schedule; dummy plan only sizes the (never-consumed)
+    # carry features, and the full branch skips the capture entirely.
+    refresh_cache = plan is not None
     if plan is None:
         branches = jnp.zeros((total,), jnp.int32)
-        e_sk = e_rf = U.n_up_steps(ucfg)  # unused; keep shapes minimal
         plan = PASPlan(total, total, 1, 1, 1)
     else:
         branches = plan_to_branches(plan, total)
@@ -88,20 +121,19 @@ def pas_denoise(
     ctx2 = jnp.concatenate([ctx_cond, ctx_uncond], axis=0)
 
     def run_unet(x, t, entry_step, entry_feat, capture):
-        x2 = jnp.concatenate([x, x], axis=0)
-        t2 = jnp.broadcast_to(t, (b2,))
-        eps2, cap = U.unet_apply(
-            ucfg, params, x2, t2, ctx2,
-            entry_step=entry_step, entry_feat=entry_feat, capture_steps=capture,
+        return cfg_unet_step(
+            ucfg, params, guidance, x, t, ctx2,
+            entry_step=entry_step, entry_feat=entry_feat, capture=capture,
         )
-        e_c, e_u = jnp.split(eps2, 2, axis=0)
-        return e_u + guidance * (e_c - e_u), cap
 
     f_sk0 = jnp.zeros(_feat_shape(ucfg, e_sk, b2), x_t.dtype)
     f_rf0 = jnp.zeros(_feat_shape(ucfg, e_rf, b2), x_t.dtype)
 
     def full_branch(op):
         x, t, f_sk, f_rf = op
+        if not refresh_cache:
+            eps, _ = run_unet(x, t, 0, None, capture=())
+            return eps, f_sk, f_rf
         eps, cap = run_unet(x, t, 0, None, capture=(e_sk, e_rf))
         return eps, cap[e_sk], cap[e_rf]
 

@@ -11,8 +11,9 @@ benefits carry over verbatim.
 
 Grid: (L tiles, Cout tiles, F).  The F axis is innermost-sequential and
 carries an fp32 VMEM accumulator; the activation block is loaded with a
-halo of ``pad*W + pad`` rows each side (``pl.Element`` indexing) so every
-shifted read stays inside VMEM.
+halo of ``pad*W + pad`` rows each side (``pl.unblocked`` element-offset
+indexing, so neighbouring blocks overlap) and every shifted read stays
+inside VMEM.
 """
 from __future__ import annotations
 
@@ -115,9 +116,11 @@ def uniconv(
             kernel,
             grid=(nl, nn, nf),
             in_specs=[
+                # element-granular offsets (blocks overlap by the halo)
                 pl.BlockSpec(
-                    (pl.Element(bl + 2 * halo), cin),
+                    (bl + 2 * halo, cin),
                     lambda li, ni, fi: (li * bl, 0),
+                    indexing_mode=pl.unblocked,
                 ),
                 pl.BlockSpec((1, cin, bn), lambda li, ni, fi: (fi, 0, ni)),
             ],

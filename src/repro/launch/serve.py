@@ -1,10 +1,11 @@
-"""Batched serving drivers.
+"""Serving CLI — thin front-end over ``repro.serving``.
 
-``diffusion`` mode is the paper's deployment scenario: a request queue of
-text-conditioned image generations, served in fixed-size batches through
-the PAS sampler (full or phase-aware).  Requests carry their own prompt
-embedding; the server packs them, runs one jitted PAS denoise, and unpacks
-per-request latents through the VAE decoder.
+``diffusion`` mode is the paper's deployment scenario: a queue of
+text-conditioned image generations served through the PAS sampler.  The
+default engine is the step-level continuous-batching
+:class:`repro.serving.DiffusionEngine` (heterogeneous step counts and PAS
+plans per request, immediate lane backfill); ``--engine static`` keeps the
+seed's fixed-size lockstep batching for comparison.
 
 ``lm`` mode serves an assigned LM arch: batched prefill then greedy decode
 against the KV cache (the ``decode_*`` dry-run cells lower exactly this
@@ -12,6 +13,7 @@ step function).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --engine static
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma3-1b --requests 4
 """
 from __future__ import annotations
@@ -27,21 +29,27 @@ import numpy as np
 
 from repro.common.types import DiffusionConfig, PASPlan
 from repro.configs import ARCH_IDS, get_lm_config, get_unet_config
-from repro.core import sampler as SM
 from repro.launch.steps import get_adapter
 from repro.models import unet as U
 from repro.models import vae as V
+from repro.serving import (
+    DiffusionEngine,
+    EngineConfig,
+    GenRequest,
+    PlanAwareScheduler,
+    serve_static,
+)
 
 
 # ---------------------------------------------------------------------------
-# Request plumbing
+# Request plumbing (lm mode; diffusion uses repro.serving.GenRequest)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    payload: Any  # ctx embedding (diffusion) or token prompt (lm)
+    payload: Any  # token prompt
     submitted: float = dataclasses.field(default_factory=time.perf_counter)
     completed: float | None = None
     result: Any = None
@@ -65,69 +73,76 @@ def pack_batches(reqs: list[Request], batch: int) -> list[list[Request]]:
 # ---------------------------------------------------------------------------
 
 
+def default_pas_plan(timesteps: int, n_up: int) -> PASPlan:
+    """The CLI's stock phase-aware plan (same shape as the seed server's)."""
+    plan = PASPlan(
+        t_sketch=timesteps // 2,
+        t_complete=max(2, timesteps // 10),
+        t_sparse=4,
+        l_sketch=min(3, n_up),
+        l_refine=min(2, n_up),
+    )
+    plan.validate(timesteps, n_up)
+    return plan
+
+
+def make_diffusion_requests(args, ucfg) -> list[GenRequest]:
+    """Synthetic request stream: per-request prompt embeddings and noise."""
+    n_up = U.n_up_steps(ucfg)
+    L = ucfg.latent_size**2
+    reqs = []
+    for i in range(args.requests):
+        rng = np.random.default_rng(args.seed * 100_003 + i)
+        reqs.append(
+            GenRequest(
+                rid=i,
+                ctx=rng.normal(size=(ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32),
+                noise=rng.normal(size=(L, ucfg.in_channels)).astype(np.float32),
+                timesteps=args.timesteps,
+                plan=default_pas_plan(args.timesteps, n_up) if args.pas else None,
+            )
+        )
+    return reqs
+
+
 def serve_diffusion(args) -> dict:
     ucfg = get_unet_config(args.unet)
     dcfg = DiffusionConfig(timesteps_sample=args.timesteps)
     key = jax.random.key(args.seed)
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2 = jax.random.split(key)
     params = U.init_unet(k1, ucfg)
     vae_params = V.init_vae(k2, latent_channels=ucfg.in_channels)
 
-    plan = None
-    if args.pas:
-        n_up = U.n_up_steps(ucfg)
-        plan = PASPlan(
-            t_sketch=args.timesteps // 2,
-            t_complete=max(2, args.timesteps // 10),
-            t_sparse=4,
+    n_up = U.n_up_steps(ucfg)
+    reqs = make_diffusion_requests(args, ucfg)
+    engine_kind = getattr(args, "engine", "continuous")
+
+    if engine_kind == "static":
+        plan_fn = (lambda t: default_pas_plan(t, n_up)) if args.pas else (lambda t: None)
+        done, summary = serve_static(
+            ucfg, dcfg, params, vae_params, reqs, args.batch, plan_fn=plan_fn
+        )
+    else:
+        cfg = EngineConfig(
+            n_lanes=args.batch,
+            max_steps=args.timesteps,
             l_sketch=min(3, n_up),
             l_refine=min(2, n_up),
         )
-        plan.validate(args.timesteps, n_up)
+        engine = DiffusionEngine(
+            ucfg, dcfg, params, vae_params, cfg,
+            scheduler=PlanAwareScheduler(window=getattr(args, "window", 4)),
+        )
+        done, summary = engine.run(reqs)
 
-    b = args.batch
-    L = ucfg.latent_size**2
-
-    lhw = (ucfg.latent_size, ucfg.latent_size)
-
-    @jax.jit
-    def generate(noise, ctx):
-        uncond = jnp.zeros_like(ctx)
-        x0 = SM.pas_denoise(ucfg, dcfg, params, plan, noise, ctx, uncond)
-        return V.vae_decode(vae_params, x0, lhw)
-
-    # synthetic request stream: random prompt embeddings
-    reqs = [
-        Request(rid=i, payload=np.random.default_rng(i).normal(size=(ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32))
-        for i in range(args.requests)
-    ]
-
-    done: list[Request] = []
-    t_start = time.perf_counter()
-    for group in pack_batches(reqs, b):
-        ctx = np.stack([g.payload for g in group] + [group[-1].payload] * (b - len(group)))
-        noise = jax.random.normal(k3, (b, L, ucfg.in_channels))
-        imgs = generate(noise, jnp.asarray(ctx))
-        imgs.block_until_ready()
-        now = time.perf_counter()
-        for lane, g in enumerate(group):
-            g.result = np.asarray(imgs[lane])
-            g.completed = now
-            done.append(g)
-    wall = time.perf_counter() - t_start
-
-    lat = [r.latency for r in done]
-    stats = {
-        "mode": "diffusion",
-        "pas": bool(args.pas),
-        "requests": len(done),
-        "wall_s": round(wall, 3),
-        "throughput_img_s": round(len(done) / wall, 3),
-        "p50_latency_s": round(float(np.percentile(lat, 50)), 3),
-        "p99_latency_s": round(float(np.percentile(lat, 99)), 3),
-        "image_shape": tuple(done[0].result.shape),
-    }
-    return stats
+    assert sorted(r.rid for r in done) == list(range(args.requests))
+    return dict(
+        summary,
+        mode="diffusion",
+        engine=engine_kind,
+        pas=bool(args.pas),
+        image_shape=tuple(done[0].image.shape),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -203,9 +218,16 @@ def main() -> None:
     ap.add_argument("--unet", default="sd_toy")
     ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-1b")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="lanes (continuous) / batch (static)")
     ap.add_argument("--timesteps", type=int, default=20)
     ap.add_argument("--pas", action="store_true", help="serve with phase-aware sampling")
+    ap.add_argument(
+        "--engine",
+        choices=["continuous", "static"],
+        default="continuous",
+        help="step-level continuous batching vs fixed-size lockstep batches",
+    )
+    ap.add_argument("--window", type=int, default=4, help="plan-aware admission window")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)

@@ -62,6 +62,23 @@ def ddim_step(
     return jnp.sqrt(ab_p) * x0 + jnp.sqrt(1 - ab_p) * eps
 
 
+def ddim_step_batched(
+    sched: NoiseSchedule, x: jax.Array, eps: jax.Array, t: jax.Array, t_prev: jax.Array
+) -> jax.Array:
+    """DDIM with a *per-sample* timestep vector.
+
+    ``x``/``eps``: [B, ...]; ``t``/``t_prev``: [B] ints.  Per-sample math is
+    identical to :func:`ddim_step`; the serving engine uses this because each
+    lane sits at its own denoise step.
+    """
+    bshape = (-1,) + (1,) * (x.ndim - 1)
+    ab_t = sched.alphas_cumprod[t].reshape(bshape)
+    ab_p = jnp.where(t_prev >= 0, sched.alphas_cumprod[jnp.maximum(t_prev, 0)], 1.0)
+    ab_p = ab_p.reshape(bshape)
+    x0 = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_p) * x0 + jnp.sqrt(1 - ab_p) * eps
+
+
 # ---------------------------------------------------------------------------
 # PNDM (PLMS) — linear multistep on the transfer function, paper's choice
 # ---------------------------------------------------------------------------
@@ -96,6 +113,35 @@ def pndm_step(
 
     x_prev = ddim_step(sched, x, eps_prime, t, t_prev)
     return x_prev, PNDMState(ets=ets, n_ets=n)
+
+
+def pndm_step_batched(
+    sched: NoiseSchedule,
+    ets: jax.Array,  # [B, 4, ...] per-sample ring of recent eps predictions
+    n_ets: jax.Array,  # [B] per-sample warmup counts
+    x: jax.Array,  # [B, ...]
+    eps: jax.Array,  # [B, ...]
+    t: jax.Array,  # [B]
+    t_prev: jax.Array,  # [B]
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """PLMS with per-sample timesteps and per-sample multistep history.
+
+    The batch axis is fully independent: sample ``i`` follows exactly the
+    trajectory :func:`pndm_step` would give it alone.  Returns
+    (x_prev, ets, n_ets) so callers can mask the update per lane.
+    """
+    ets = jnp.roll(ets, 1, axis=1).at[:, 0].set(eps)
+    n = jnp.minimum(n_ets + 1, 4)
+
+    e1 = ets[:, 0]
+    e2 = (3 * ets[:, 0] - ets[:, 1]) / 2
+    e3 = (23 * ets[:, 0] - 16 * ets[:, 1] + 5 * ets[:, 2]) / 12
+    e4 = (55 * ets[:, 0] - 59 * ets[:, 1] + 37 * ets[:, 2] - 9 * ets[:, 3]) / 24
+    nb = n.reshape((-1,) + (1,) * (x.ndim - 1))
+    eps_prime = jnp.where(nb == 1, e1, jnp.where(nb == 2, e2, jnp.where(nb == 3, e3, e4)))
+
+    x_prev = ddim_step_batched(sched, x, eps_prime, t, t_prev)
+    return x_prev, ets, n
 
 
 # ---------------------------------------------------------------------------

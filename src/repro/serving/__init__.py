@@ -1,0 +1,32 @@
+"""Step-level continuous-batching serving for the PAS diffusion sampler.
+
+* ``lanes``     — per-lane sampler state (``LaneState``) + jitted micro-step
+* ``scheduler`` — admission queue packing policies (FIFO, plan-aware)
+* ``engine``    — the continuous-batching event loop + static baseline
+* ``metrics``   — latency percentiles, throughput, lane occupancy
+"""
+from repro.serving.engine import (
+    CompletedRequest,
+    DiffusionEngine,
+    EngineConfig,
+    GenRequest,
+    StaticServer,
+    serve_static,
+)
+from repro.serving.lanes import LaneState, make_plan_arrays
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import FIFOScheduler, PlanAwareScheduler
+
+__all__ = [
+    "CompletedRequest",
+    "DiffusionEngine",
+    "EngineConfig",
+    "FIFOScheduler",
+    "GenRequest",
+    "LaneState",
+    "PlanAwareScheduler",
+    "ServingMetrics",
+    "StaticServer",
+    "make_plan_arrays",
+    "serve_static",
+]

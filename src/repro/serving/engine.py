@@ -1,0 +1,427 @@
+"""Continuous-batching diffusion serving engine (+ static lockstep baseline).
+
+The engine advances a fixed set of *lanes* through the PAS denoise loop one
+micro-step at a time.  Lanes hold requests at heterogeneous denoise steps;
+each micro-step executes one branch class (FULL / SKETCH / REFINE) chosen by
+the packing policy as a single batched U-Net invocation, so a micro-step
+costs what one step of an equally wide static batch costs.  Lanes retire
+through the VAE decoder the moment their own schedule finishes and are
+immediately backfilled from the admission queue — no lane ever waits for a
+batch-mate (the lockstep waste ``serve_static`` below exists to measure).
+
+Requests may differ in step count and in phase boundaries (``t_sketch``,
+``t_complete``, ``t_sparse``) — the branch *plan* is per-lane.  The feature
+-cache geometry (``l_sketch``, ``l_refine``) is engine-level, because cache
+slot shapes must be static under jit; requests either match it or run
+all-FULL (``plan=None``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
+from repro.core import sampler as SM
+from repro.models import unet as U
+from repro.models import vae as V
+from repro.serving import lanes as LN
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import FIFOScheduler
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics: queues remove by object
+class GenRequest:
+    """One text-conditioned generation request."""
+
+    rid: int
+    ctx: np.ndarray  # [ctx_len, ctx_dim] prompt embedding
+    noise: np.ndarray  # [L, C] initial latent noise
+    timesteps: int
+    plan: PASPlan | None = None
+    arrival_s: float = 0.0  # offset from stream start
+
+    _lane_plan: LN.LanePlan | None = dataclasses.field(default=None, repr=False)
+
+    def branch_vector(self) -> np.ndarray:
+        assert self._lane_plan is not None, "request not yet submitted"
+        return self._lane_plan.branches[: self.timesteps]
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    rid: int
+    latent: np.ndarray
+    image: np.ndarray | None
+    submitted_s: float
+    admitted_s: float
+    completed_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.completed_s - self.submitted_s
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admitted_s - self.submitted_s
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_lanes: int = 4
+    max_steps: int = 64
+    l_sketch: int = 3  # feature-cache geometry (see module docstring)
+    l_refine: int = 2
+    decode_images: bool = True
+
+
+class DiffusionEngine:
+    def __init__(
+        self,
+        ucfg: UNetConfig,
+        dcfg: DiffusionConfig,
+        params: Params,
+        vae_params: Params | None = None,
+        config: EngineConfig = EngineConfig(),
+        scheduler: FIFOScheduler | None = None,
+    ):
+        n_up = U.n_up_steps(ucfg)
+        if not (0 < config.l_refine <= config.l_sketch <= n_up):
+            raise ValueError("engine cache geometry violates 0 < l_refine <= l_sketch <= n_up")
+        self.ucfg, self.dcfg, self.config = ucfg, dcfg, config
+        self.e_sk = n_up - config.l_sketch
+        self.e_rf = n_up - config.l_refine
+        self.scheduler = scheduler if scheduler is not None else FIFOScheduler()
+        self.metrics = ServingMetrics()
+
+        self._state = LN.init_lanes(
+            ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf
+        )
+        self._micro = LN.make_micro_step(ucfg, dcfg, params, self.e_sk, self.e_rf)
+        self._admit = jax.jit(LN.admit, donate_argnums=(0,))
+        self._decoder = None
+        if vae_params is not None and config.decode_images:
+            lhw = (ucfg.latent_size, ucfg.latent_size)
+            self._decoder = jax.jit(lambda z: V.vae_decode(vae_params, z, lhw))
+
+        # host mirrors (device round-trips per micro-step stay O(n_lanes))
+        n = config.n_lanes
+        self._lane_req: list[GenRequest | None] = [None] * n
+        self._lane_step = np.zeros((n,), np.int64)
+        self._lane_admit_s = np.zeros((n,), np.float64)
+        self._stall = np.zeros((n,), np.int64)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: GenRequest) -> None:
+        if req.plan is not None:
+            req.plan.validate(req.timesteps, U.n_up_steps(self.ucfg))
+            if (req.plan.l_sketch, req.plan.l_refine) != (
+                self.config.l_sketch,
+                self.config.l_refine,
+            ):
+                raise ValueError(
+                    "request plan cache geometry (l_sketch, l_refine) = "
+                    f"({req.plan.l_sketch}, {req.plan.l_refine}) does not match "
+                    f"engine ({self.config.l_sketch}, {self.config.l_refine})"
+                )
+        req._lane_plan = LN.make_plan_arrays(
+            self.dcfg, req.timesteps, req.plan, self.config.max_steps
+        )
+        self.scheduler.add(req)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._lane_req)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.scheduler)
+
+    def _active_lanes(self) -> list[int]:
+        return [i for i, r in enumerate(self._lane_req) if r is not None]
+
+    def _remaining_branches(self) -> list[np.ndarray]:
+        out = []
+        for i in self._active_lanes():
+            req = self._lane_req[i]
+            out.append(req._lane_plan.branches[self._lane_step[i] : req.timesteps])
+        return out
+
+    # -- event loop ---------------------------------------------------------
+
+    def _backfill(self, now_s: float) -> None:
+        for lane, holder in enumerate(self._lane_req):
+            if holder is not None:
+                continue
+            req = self.scheduler.next_request(self._remaining_branches())
+            if req is None:
+                return
+            lp = req._lane_plan
+            self._state = self._admit(
+                self._state,
+                jnp.int32(lane),
+                jnp.asarray(req.noise),
+                jnp.asarray(req.ctx),
+                jnp.asarray(lp.branches),
+                jnp.asarray(lp.ts),
+                jnp.asarray(lp.t_prev),
+                jnp.int32(lp.n_steps),
+            )
+            self._lane_req[lane] = req
+            self._lane_step[lane] = 0
+            self._lane_admit_s[lane] = now_s
+            self._stall[lane] = 0
+
+    def step(self, now_s: float = 0.0, clock: Callable[[], float] | None = None) -> list[CompletedRequest]:
+        """Backfill, run one micro-step, retire finished lanes.
+
+        ``clock`` (same origin as ``now_s``) re-reads the time *after* the
+        retirement device sync so completion stamps include the queued
+        async compute; without it ``now_s`` is used as-is.
+        """
+        self._backfill(now_s)
+        active = self._active_lanes()
+        if not active:
+            return []
+
+        lane_classes = np.array(
+            [self._lane_req[i]._lane_plan.branches[self._lane_step[i]] for i in active],
+            np.int64,
+        )
+        b_star = self.scheduler.pick_branch(lane_classes, self._stall[active])
+
+        self._state = self._micro(self._state, jnp.int32(b_star))
+        # the advance mask is deterministic from the host-known plans —
+        # mirror it here instead of syncing on the device (keeps dispatch async)
+        sel = np.zeros((self.config.n_lanes,), bool)
+        sel[np.asarray(active)[lane_classes == b_star]] = True
+        self._lane_step[sel] += 1
+        self._stall[active] += 1
+        self._stall[sel] = 0
+        self.metrics.record_step(self.config.n_lanes, len(active), int(sel.sum()))
+
+        done: list[CompletedRequest] = []
+        for lane in active:
+            req = self._lane_req[lane]
+            if self._lane_step[lane] < req.timesteps:
+                continue
+            latent = self._state.x[lane]
+            image = None
+            if self._decoder is not None:
+                image = np.asarray(self._decoder(latent[None])[0])
+            latent = np.asarray(latent)  # syncs the queued micro-steps
+            done.append(
+                CompletedRequest(
+                    rid=req.rid,
+                    latent=latent,
+                    image=image,
+                    submitted_s=req.arrival_s,
+                    admitted_s=self._lane_admit_s[lane],
+                    completed_s=clock() if clock is not None else now_s,
+                )
+            )
+            self._state = LN.release(self._state, jnp.int32(lane))
+            self._lane_req[lane] = None
+            self.metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
+        return done
+
+    def run(
+        self, requests: Sequence[GenRequest], *, realtime: bool = False
+    ) -> tuple[list[CompletedRequest], dict]:
+        """Serve a request stream to completion.
+
+        ``realtime=False`` ignores arrival offsets (everything is queued up
+        front).  ``realtime=True`` replays ``arrival_s`` against the wall
+        clock — the benchmark's Poisson open-loop mode.  The engine is
+        reusable: compiled micro-steps persist across calls and metrics
+        reset per call.
+        """
+        self.metrics = ServingMetrics()
+        pending = sorted(requests, key=lambda r: r.arrival_s)
+        t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t0
+        done: list[CompletedRequest] = []
+        if not realtime:
+            for req in pending:
+                self.submit(req)
+            pending = []
+        while pending or self.n_pending or self.n_active:
+            now = clock()
+            while pending and pending[0].arrival_s <= now:
+                self.submit(pending.pop(0))
+            if not self.n_pending and not self.n_active and pending:
+                time.sleep(min(pending[0].arrival_s - now, 0.05))
+                continue
+            done.extend(self.step(now_s=clock(), clock=clock))
+        self.metrics.wall_s = time.perf_counter() - t0
+        summary = dict(self.metrics.summary(), mode="continuous", lanes=self.config.n_lanes)
+        return done, summary
+
+
+# ---------------------------------------------------------------------------
+# Static fixed-size lockstep batching (the seed `serve.py` behaviour),
+# kept as the baseline that `benchmarks/bench_serving.py` measures against.
+# ---------------------------------------------------------------------------
+
+
+class StaticServer:
+    """Fixed-size FIFO batches running the PAS sampler in lockstep.
+
+    The whole batch runs ``max(timesteps)`` of its members (lockstep cannot
+    do otherwise), short batches are padded by repeating the last request,
+    and a batch only launches once all its members have arrived.  The run
+    summary reports ``idle_lane_frac`` — the fraction of lane-steps spent on
+    padding or lockstep overshoot — which is exactly the waste continuous
+    batching exists to reclaim.  Compiled samplers are cached per
+    (step count, plan), so a warmup run amortizes jit for later runs.
+    """
+
+    def __init__(
+        self,
+        ucfg: UNetConfig,
+        dcfg: DiffusionConfig,
+        params: Params,
+        vae_params: Params | None,
+        batch: int,
+        *,
+        plan_fn: Callable[[int], PASPlan | None] = lambda t: None,
+        decode_images: bool = True,
+    ):
+        self.ucfg, self.dcfg, self.batch, self.plan_fn = ucfg, dcfg, batch, plan_fn
+        lhw = (ucfg.latent_size, ucfg.latent_size)
+
+        @functools.lru_cache(maxsize=None)
+        def compiled(total_steps: int, plan: PASPlan | None):
+            d = dataclasses.replace(dcfg, timesteps_sample=total_steps)
+
+            @jax.jit
+            def gen(noise, ctx):
+                x0 = SM.pas_denoise(ucfg, d, params, plan, noise, ctx, jnp.zeros_like(ctx))
+                if vae_params is not None and decode_images:
+                    return x0, V.vae_decode(vae_params, x0, lhw)
+                return x0, None
+
+            return gen
+
+        self._compiled = compiled
+
+    def _dummy_inputs(self):
+        L = self.ucfg.latent_size**2
+        noise = jnp.zeros((self.batch, L, self.ucfg.in_channels), jnp.float32)
+        ctx = jnp.zeros((self.batch, self.ucfg.ctx_len, self.ucfg.ctx_dim), jnp.float32)
+        return noise, ctx
+
+    def warmup(self, timesteps: Sequence[int]) -> None:
+        """Pre-compile the lockstep sampler for every listed step count."""
+        noise, ctx = self._dummy_inputs()
+        for t in timesteps:
+            x0, _ = self._compiled(t, self.plan_fn(t))(noise, ctx)
+            x0.block_until_ready()
+
+    def time_step_s(self, timesteps: int, iters: int = 3) -> float:
+        """Median per-denoise-step wall seconds of the compiled sampler
+        (used by benchmarks to pick arrival rates around saturation)."""
+        noise, ctx = self._dummy_inputs()
+        fn = self._compiled(timesteps, self.plan_fn(timesteps))
+        fn(noise, ctx)[0].block_until_ready()
+        walls = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn(noise, ctx)[0].block_until_ready()
+            walls.append(time.perf_counter() - t0)
+        walls.sort()
+        return walls[len(walls) // 2] / timesteps
+
+    def run(
+        self, requests: Sequence[GenRequest], *, realtime: bool = False
+    ) -> tuple[list[CompletedRequest], dict]:
+        batch = self.batch
+        pending = sorted(requests, key=lambda r: r.arrival_s)
+        metrics = ServingMetrics()
+        done: list[CompletedRequest] = []
+        total_lane_steps = 0
+        useful_lane_steps = 0
+        t0 = time.perf_counter()
+        i = 0
+        while i < len(pending):
+            group = pending[i : i + batch]
+            i += len(group)
+            if realtime:
+                wait = group[-1].arrival_s - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(wait)
+            admit_s = time.perf_counter() - t0
+            t_max = max(r.timesteps for r in group)
+            pad = batch - len(group)
+            noise = np.stack([r.noise for r in group] + [group[-1].noise] * pad)
+            ctx = np.stack([r.ctx for r in group] + [group[-1].ctx] * pad)
+            x0, imgs = self._compiled(t_max, self.plan_fn(t_max))(
+                jnp.asarray(noise), jnp.asarray(ctx)
+            )
+            x0.block_until_ready()
+            now = time.perf_counter() - t0
+            total_lane_steps += batch * t_max
+            useful_lane_steps += sum(r.timesteps for r in group)
+            for _ in range(t_max):
+                metrics.record_step(batch, len(group), len(group))
+            for lane, req in enumerate(group):
+                done.append(
+                    CompletedRequest(
+                        rid=req.rid,
+                        latent=np.asarray(x0[lane]),
+                        image=None if imgs is None else np.asarray(imgs[lane]),
+                        submitted_s=req.arrival_s,
+                        admitted_s=admit_s,
+                        completed_s=now,
+                    )
+                )
+                metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
+        metrics.wall_s = time.perf_counter() - t0
+        idle = 1.0 - useful_lane_steps / max(total_lane_steps, 1)
+        summary = dict(
+            metrics.summary(),
+            mode="static",
+            lanes=batch,
+            idle_lane_frac=round(idle, 3),
+        )
+        return done, summary
+
+
+def serve_static(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    params: Params,
+    vae_params: Params | None,
+    requests: Sequence[GenRequest],
+    batch: int,
+    *,
+    plan_fn: Callable[[int], PASPlan | None] = lambda t: None,
+    decode_images: bool = True,
+    realtime: bool = False,
+) -> tuple[list[CompletedRequest], dict]:
+    """One-shot convenience wrapper around :class:`StaticServer`."""
+    server = StaticServer(
+        ucfg, dcfg, params, vae_params, batch,
+        plan_fn=plan_fn, decode_images=decode_images,
+    )
+    return server.run(requests, realtime=realtime)

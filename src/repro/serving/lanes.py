@@ -1,0 +1,240 @@
+"""Per-lane sampler state for step-level continuous batching.
+
+``core.sampler.pas_denoise`` carries its whole loop state — latent, PNDM
+multistep ring, sketch/refine feature caches, branch vector — inside one
+``lax.scan``.  Here that carry is lifted into an explicit per-lane
+:class:`LaneState` pytree so a serving engine can:
+
+* advance lanes sitting at *heterogeneous* denoise steps in one jitted
+  micro-step (one ``lax.switch``-selected U-Net invocation over the whole
+  lane batch, driven by each lane's precomputed branch plan),
+* admit a new request into a retired lane by scatter (``admit``), and
+* read a finished lane's latent by gather (``gather_latent``).
+
+Layout notes
+------------
+* Lane arrays carry the lane axis first: ``x`` is [N, L, C], the PNDM ring
+  is [N, 4, L, C].
+* The sketch/refine feature caches keep the CFG-doubled ``[2N, ...]``
+  layout of :func:`repro.core.sampler.cfg_unet_step` — rows ``i`` and
+  ``N + i`` belong to lane ``i`` — so the batched partial U-Net consumes a
+  cache slot without any transpose.
+* Per-lane plans are padded to ``max_steps``; ``step[i] < n_steps[i]``
+  defines liveness, so the padded tail never executes.  An empty lane has
+  ``n_steps == 0`` and all-zero tensors (zeros keep the masked-out batched
+  compute NaN-free).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
+from repro.core import sampler as SM
+from repro.models import diffusion as D
+
+Params = dict[str, Any]
+
+
+class LaneState(NamedTuple):
+    """All per-lane sampler state, as one pytree of lane-major arrays."""
+
+    x: jax.Array  # [N, L, C] current latent
+    ets: jax.Array  # [N, 4, L, C] PNDM eps ring
+    n_ets: jax.Array  # [N] PNDM warmup count
+    f_sk: jax.Array  # [2N, L_sk, C_sk] sketch-entry feature cache
+    f_rf: jax.Array  # [2N, L_rf, C_rf] refine-entry feature cache
+    ctx2: jax.Array  # [2N, ctx_len, ctx_dim] CFG-doubled conditioning (uncond rows 0)
+    branches: jax.Array  # [N, max_steps] FULL/SKETCH/REFINE per step
+    ts: jax.Array  # [N, max_steps] timestep per step
+    t_prev: jax.Array  # [N, max_steps] successor timestep (-1 at the end)
+    step: jax.Array  # [N] current step index into the plan
+    n_steps: jax.Array  # [N] plan length; 0 marks an empty lane
+
+    @property
+    def n_lanes(self) -> int:
+        return self.x.shape[0]
+
+    def active_mask(self) -> jax.Array:
+        return self.step < self.n_steps
+
+
+class LanePlan(NamedTuple):
+    """Host-side padded plan arrays for one request."""
+
+    branches: np.ndarray  # [max_steps] int32
+    ts: np.ndarray  # [max_steps] int32
+    t_prev: np.ndarray  # [max_steps] int32
+    n_steps: int
+
+
+def make_plan_arrays(
+    dcfg: DiffusionConfig, timesteps: int, plan: PASPlan | None, max_steps: int
+) -> LanePlan:
+    """Precompute one request's branch/timestep vectors, padded to max_steps."""
+    if timesteps > max_steps:
+        raise ValueError(f"request wants {timesteps} steps, engine max is {max_steps}")
+    stride = dcfg.timesteps_train // timesteps
+    ts = (np.arange(timesteps, dtype=np.int64) * stride)[::-1].astype(np.int32)
+    t_prev = np.concatenate([ts[1:], np.array([-1], np.int32)])
+    if plan is None:
+        branches = np.full((timesteps,), SM.FULL, np.int32)
+    else:
+        branches = np.asarray(SM.plan_to_branches(plan, timesteps))
+
+    def pad(a: np.ndarray) -> np.ndarray:
+        out = np.zeros((max_steps,), np.int32)
+        out[:timesteps] = a
+        return out
+
+    return LanePlan(pad(branches), pad(ts), pad(t_prev), timesteps)
+
+
+def init_lanes(
+    ucfg: UNetConfig,
+    n_lanes: int,
+    max_steps: int,
+    e_sk: int,
+    e_rf: int,
+    dtype=jnp.float32,
+) -> LaneState:
+    """All-empty lane state (every lane has ``n_steps == 0``)."""
+    L = ucfg.latent_size**2
+    c = ucfg.in_channels
+    z = jnp.zeros
+    return LaneState(
+        x=z((n_lanes, L, c), dtype),
+        ets=z((n_lanes, 4, L, c), dtype),
+        n_ets=z((n_lanes,), jnp.int32),
+        f_sk=z(SM._feat_shape(ucfg, e_sk, 2 * n_lanes), dtype),
+        f_rf=z(SM._feat_shape(ucfg, e_rf, 2 * n_lanes), dtype),
+        ctx2=z((2 * n_lanes, ucfg.ctx_len, ucfg.ctx_dim), dtype),
+        branches=z((n_lanes, max_steps), jnp.int32),
+        ts=z((n_lanes, max_steps), jnp.int32),
+        t_prev=z((n_lanes, max_steps), jnp.int32),
+        step=z((n_lanes,), jnp.int32),
+        n_steps=z((n_lanes,), jnp.int32),
+    )
+
+
+def admit(
+    state: LaneState,
+    lane: jax.Array,  # scalar int32 lane index (traced: one compile)
+    noise: jax.Array,  # [L, C] request's initial latent noise
+    ctx: jax.Array,  # [ctx_len, ctx_dim]
+    branches: jax.Array,  # [max_steps]
+    ts: jax.Array,  # [max_steps]
+    t_prev: jax.Array,  # [max_steps]
+    n_steps: jax.Array,  # scalar int32
+) -> LaneState:
+    """Scatter one request into an (empty) lane, resetting its sampler state."""
+    n = state.n_lanes
+    return LaneState(
+        x=state.x.at[lane].set(noise),
+        ets=state.ets.at[lane].set(0.0),
+        n_ets=state.n_ets.at[lane].set(0),
+        f_sk=state.f_sk.at[lane].set(0.0).at[n + lane].set(0.0),
+        f_rf=state.f_rf.at[lane].set(0.0).at[n + lane].set(0.0),
+        ctx2=state.ctx2.at[lane].set(ctx).at[n + lane].set(0.0),
+        branches=state.branches.at[lane].set(branches),
+        ts=state.ts.at[lane].set(ts),
+        t_prev=state.t_prev.at[lane].set(t_prev),
+        step=state.step.at[lane].set(0),
+        n_steps=state.n_steps.at[lane].set(n_steps),
+    )
+
+
+def release(state: LaneState, lane: jax.Array) -> LaneState:
+    """Mark a lane empty (retirement without immediate backfill)."""
+    return state._replace(
+        step=state.step.at[lane].set(0),
+        n_steps=state.n_steps.at[lane].set(0),
+    )
+
+
+def gather_latent(state: LaneState, lane: int) -> jax.Array:
+    return state.x[lane]
+
+
+def make_micro_step(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    params: Params,
+    e_sk: int,
+    e_rf: int,
+):
+    """Build the jitted continuous-batching micro-step.
+
+    The returned function advances, by exactly one denoise step, every
+    active lane whose *current* branch class equals the scalar ``b_star``
+    chosen by the packing policy — one batched ``lax.switch``-selected U-Net
+    invocation for the whole lane batch, so a micro-step costs the same as
+    one step of an equally wide static batch.  Lanes in other branch
+    classes (and empty lanes) are carried through untouched via masking.
+
+    The step returns only the new state (no per-step host readback): the
+    advance mask is deterministic from the host-known plans, so the engine
+    mirrors it host-side and the device stays on the async-dispatch fast
+    path.  The input state is donated — callers must drop their reference.
+    """
+    sched = D.make_schedule(dcfg)
+    guidance = dcfg.guidance_scale
+    use_pndm = dcfg.scheduler == "pndm"
+
+    def micro_step(state: LaneState, b_star: jax.Array) -> LaneState:
+        n = state.n_lanes
+        idx = jnp.minimum(state.step, state.branches.shape[1] - 1)
+        take = lambda a: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+        cur_br = take(state.branches)
+        t = take(state.ts)
+        tp = take(state.t_prev)
+        sel = state.active_mask() & (cur_br == b_star)
+        ctx2 = state.ctx2
+
+        def full_branch(_):
+            eps, cap = SM.cfg_unet_step(
+                ucfg, params, guidance, state.x, t, ctx2, capture=(e_sk, e_rf)
+            )
+            return eps, cap[e_sk], cap[e_rf]
+
+        def sketch_branch(_):
+            eps, _ = SM.cfg_unet_step(
+                ucfg, params, guidance, state.x, t, ctx2,
+                entry_step=e_sk, entry_feat=state.f_sk,
+            )
+            return eps, state.f_sk, state.f_rf
+
+        def refine_branch(_):
+            eps, _ = SM.cfg_unet_step(
+                ucfg, params, guidance, state.x, t, ctx2,
+                entry_step=e_rf, entry_feat=state.f_rf,
+            )
+            return eps, state.f_sk, state.f_rf
+
+        eps, f_sk_new, f_rf_new = jax.lax.switch(
+            jnp.clip(b_star, 0, 2), (full_branch, sketch_branch, refine_branch), None
+        )
+
+        if use_pndm:
+            x_new, ets_new, n_new = D.pndm_step_batched(
+                sched, state.ets, state.n_ets, state.x, eps, t, tp
+            )
+        else:
+            x_new = D.ddim_step_batched(sched, state.x, eps, t, tp)
+            ets_new, n_new = state.ets, state.n_ets
+
+        m3 = sel[:, None, None]
+        sel2 = jnp.concatenate([sel, sel], axis=0)[:, None, None]
+        return state._replace(
+            x=jnp.where(m3, x_new, state.x),
+            ets=jnp.where(sel[:, None, None, None], ets_new, state.ets),
+            n_ets=jnp.where(sel, n_new, state.n_ets),
+            f_sk=jnp.where(sel2, f_sk_new, state.f_sk),
+            f_rf=jnp.where(sel2, f_rf_new, state.f_rf),
+            step=state.step + sel.astype(jnp.int32),
+        )
+
+    return jax.jit(micro_step, donate_argnums=(0,))

@@ -1,0 +1,57 @@
+"""Serving metrics: latency percentiles, throughput, lane occupancy.
+
+The engine records one sample per micro-step (occupancy = fraction of lanes
+holding a request, advance efficiency = fraction of *active* lanes the step
+actually moved) and one sample per completed request (queue + service
+latency).  ``summary()`` collapses everything into the flat dict printed by
+``launch/serve.py`` and consumed by ``benchmarks/bench_serving.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    latencies_s: list[float] = dataclasses.field(default_factory=list)
+    queue_waits_s: list[float] = dataclasses.field(default_factory=list)
+    occupancy: list[float] = dataclasses.field(default_factory=list)
+    advance_eff: list[float] = dataclasses.field(default_factory=list)
+    micro_steps: int = 0
+    lane_steps_advanced: int = 0
+    wall_s: float = 0.0
+
+    def record_step(self, n_lanes: int, n_active: int, n_advanced: int) -> None:
+        self.micro_steps += 1
+        self.lane_steps_advanced += n_advanced
+        self.occupancy.append(n_active / max(n_lanes, 1))
+        if n_active:
+            self.advance_eff.append(n_advanced / n_active)
+
+    def record_completion(self, latency_s: float, queue_wait_s: float) -> None:
+        self.latencies_s.append(latency_s)
+        self.queue_waits_s.append(queue_wait_s)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_s) if self.latencies_s else np.zeros(1)
+        n = len(self.latencies_s)
+        return {
+            "requests": n,
+            "wall_s": round(self.wall_s, 3),
+            "throughput_req_s": round(n / self.wall_s, 3) if self.wall_s else 0.0,
+            "p50_latency_s": round(float(np.percentile(lat, 50)), 3),
+            "p99_latency_s": round(float(np.percentile(lat, 99)), 3),
+            "mean_queue_wait_s": round(float(np.mean(self.queue_waits_s)), 3)
+            if self.queue_waits_s
+            else 0.0,
+            "micro_steps": self.micro_steps,
+            "lane_steps_advanced": self.lane_steps_advanced,
+            "mean_occupancy": round(float(np.mean(self.occupancy)), 3)
+            if self.occupancy
+            else 0.0,
+            "mean_advance_eff": round(float(np.mean(self.advance_eff)), 3)
+            if self.advance_eff
+            else 0.0,
+        }

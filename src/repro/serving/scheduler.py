@@ -1,0 +1,116 @@
+"""Packing policies for the continuous-batching engine.
+
+Two decisions per micro-step, both host-side and cheap:
+
+1. **Admission** — which queued request backfills a freed lane.
+   ``FIFOScheduler`` is strict arrival order; ``PlanAwareScheduler`` looks
+   at a small FIFO window and prefers the request whose PAS branch plan
+   best lines up with the branch plans of the lanes already in flight, so
+   full-U-Net and partial-U-Net lanes amortize into the same micro-steps.
+2. **Branch class** — which of FULL/SKETCH/REFINE the next micro-step
+   executes.  Majority wins (advance the most lanes per U-Net invocation),
+   with an aging override so a minority-class lane can never starve.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Sequence
+
+import numpy as np
+
+
+class FIFOScheduler:
+    """Strict arrival-order admission + majority branch selection."""
+
+    #: micro-steps an active lane may sit unadvanced before its branch
+    #: class is forced (starvation guard).
+    patience: int = 8
+
+    def __init__(self):
+        self._queue: deque = deque()
+
+    # -- admission ----------------------------------------------------------
+
+    def add(self, request) -> None:
+        self._queue.append(request)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def peek_all(self) -> list:
+        return list(self._queue)
+
+    def next_request(self, lane_branches: Sequence[np.ndarray] = ()):
+        """Pop the request to admit next, or None if the queue is empty.
+
+        ``lane_branches`` holds each in-flight lane's *remaining* branch
+        vector (``branches[step:n_steps]``); FIFO ignores it.
+        """
+        if not self._queue:
+            return None
+        return self._queue.popleft()
+
+    # -- branch-class selection --------------------------------------------
+
+    def pick_branch(self, lane_classes: np.ndarray, stall_counts: np.ndarray) -> int:
+        """Branch class for the next micro-step.
+
+        ``lane_classes``: current branch class of every *active* lane.
+        ``stall_counts``: per-active-lane count of consecutive micro-steps
+        the lane was ready but not advanced.
+        """
+        if lane_classes.size == 0:
+            raise ValueError("no active lanes")
+        if stall_counts.size and int(stall_counts.max()) >= self.patience:
+            return int(lane_classes[int(np.argmax(stall_counts))])
+        counts = np.bincount(lane_classes, minlength=3)
+        return int(np.argmax(counts))  # ties resolve toward FULL
+
+
+class PlanAwareScheduler(FIFOScheduler):
+    """FIFO within a window, preferring plan-aligned requests.
+
+    Among the first ``window`` queued requests, admit the one whose branch
+    plan agrees most often (step-for-step) with the remaining branch plans
+    of the in-flight lanes.  A request whose FULL steps coincide with the
+    flight's FULL steps lets one micro-step advance all of them, which is
+    exactly where full- and partial-U-Net lanes amortize.  ``window=1``
+    degenerates to strict FIFO, bounding unfairness.
+    """
+
+    #: admissions the queue head may be bypassed before it is forced
+    #: (aging guard: bounds the queue wait of a poorly-aligned request).
+    max_head_skips: int = 4
+
+    def __init__(self, window: int = 4):
+        super().__init__()
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = window
+        self._head_skips = 0
+
+    @staticmethod
+    def _alignment(req_branches: np.ndarray, lane_branches: Sequence[np.ndarray]) -> float:
+        score = 0.0
+        for lb in lane_branches:
+            m = min(len(req_branches), len(lb))
+            if m:
+                score += float(np.mean(req_branches[:m] == lb[:m]))
+        return score
+
+    def next_request(self, lane_branches: Sequence[np.ndarray] = ()):
+        if not self._queue:
+            return None
+        if (
+            len(lane_branches) == 0
+            or self.window == 1
+            or self._head_skips >= self.max_head_skips
+        ):
+            self._head_skips = 0
+            return self._queue.popleft()
+        window = list(self._queue)[: self.window]
+        scores = [self._alignment(r.branch_vector(), lane_branches) for r in window]
+        best = int(np.argmax(scores))  # stable: FIFO wins ties
+        self._head_skips = self._head_skips + 1 if best else 0
+        self._queue.remove(window[best])
+        return window[best]

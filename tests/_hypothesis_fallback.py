@@ -1,0 +1,39 @@
+"""Degraded stand-ins for ``hypothesis`` when it is not installed.
+
+CI installs the real thing (see ``requirements-dev.txt``); a bare
+container can still *collect and run* every test module — property tests
+just report as skipped.  Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _AnyStrategy:
+    """Stub for ``hypothesis.strategies``: every strategy builder returns a
+    placeholder (the test body never runs — ``given`` skips it)."""
+
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: None
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    return deco

@@ -1,7 +1,10 @@
 """Fault-tolerance runtime: stragglers, elastic re-mesh, resume loop."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI installs hypothesis; bare runs degrade to skips
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime.fault_tolerance import (

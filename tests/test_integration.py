@@ -86,8 +86,18 @@ def test_serve_diffusion_end_to_end():
     args = _ns(unet="sd_toy", requests=2, batch=2, timesteps=6, pas=True, seed=0)
     stats = serve_diffusion(args)
     assert stats["requests"] == 2
-    assert stats["throughput_img_s"] > 0
+    assert stats["engine"] == "continuous"
+    assert stats["throughput_req_s"] > 0
     assert len(stats["image_shape"]) == 2  # [H*W, C] pixels
+
+    args = _ns(
+        unet="sd_toy", requests=2, batch=2, timesteps=6, pas=True, seed=0,
+        engine="static",
+    )
+    stats = serve_diffusion(args)
+    assert stats["requests"] == 2
+    assert stats["engine"] == "static"
+    assert stats["throughput_req_s"] > 0
 
 
 @pytest.mark.slow

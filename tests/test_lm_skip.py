@@ -11,6 +11,8 @@ from repro.models import transformer as T
 
 from repro.common.types import LMConfig
 
+pytestmark = pytest.mark.slow  # ~100s: full decode loops on a 6-layer LM
+
 
 @pytest.fixture(scope="module")
 def setup():

@@ -10,6 +10,8 @@ from repro.configs import ARCH_IDS, cells_for, get_lm_config
 from repro.launch.steps import cross_entropy, get_adapter, make_train_step
 from repro.optim import AdamWConfig, init_adamw
 
+pytestmark = pytest.mark.slow  # ~4 min: forward/decode over every LM arch
+
 
 def _inputs(cfg: LMConfig, b=2, s=16):
     if cfg.frontend_stub:

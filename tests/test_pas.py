@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI installs hypothesis; bare runs degrade to skips
+    from _hypothesis_fallback import given, settings, st
 
 from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
 from repro.configs import get_unet_config

@@ -1,6 +1,9 @@
 """Adaptive reuse & fusion planner (Sec. V): invariants + paper ablation."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI installs hypothesis; bare runs degrade to skips
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_unet_config
 from repro.core import reuse_planner as RP

@@ -1,0 +1,166 @@
+"""Packing-policy invariants (pure host logic — no U-Net, no jit)."""
+import dataclasses
+
+import numpy as np
+
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import FIFOScheduler, PlanAwareScheduler
+
+
+@dataclasses.dataclass
+class FakeReq:
+    rid: int
+    branches: np.ndarray
+
+    def branch_vector(self):
+        return self.branches
+
+
+def _req(rid, branches):
+    return FakeReq(rid, np.asarray(branches, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# FIFO
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_pops_in_arrival_order():
+    s = FIFOScheduler()
+    for i in range(5):
+        s.add(_req(i, [0, 0]))
+    got = [s.next_request().rid for _ in range(5)]
+    assert got == list(range(5))
+    assert s.next_request() is None
+
+
+def test_fifo_ignores_lane_context():
+    s = FIFOScheduler()
+    s.add(_req(0, [1, 1, 1]))
+    s.add(_req(1, [0, 0, 0]))
+    # in-flight lanes are all-FULL; FIFO must still pop rid 0
+    assert s.next_request([np.zeros(3, np.int32)]).rid == 0
+
+
+# ---------------------------------------------------------------------------
+# Branch-class selection
+# ---------------------------------------------------------------------------
+
+
+def test_pick_branch_majority_wins():
+    s = FIFOScheduler()
+    classes = np.array([1, 1, 2, 0])
+    assert s.pick_branch(classes, np.zeros(4, np.int64)) == 1
+
+
+def test_pick_branch_tie_prefers_full():
+    s = FIFOScheduler()
+    classes = np.array([0, 1])
+    assert s.pick_branch(classes, np.zeros(2, np.int64)) == 0
+
+
+def test_pick_branch_aging_overrides_majority():
+    s = FIFOScheduler()
+    classes = np.array([1, 1, 1, 2])
+    stalls = np.array([0, 0, 0, s.patience])
+    assert s.pick_branch(classes, stalls) == 2
+
+
+def test_pick_branch_starvation_freedom():
+    """Under any fixed opposing majority, a stalled lane is served within
+    ``patience`` micro-steps."""
+    s = FIFOScheduler()
+    classes = np.array([0, 0, 0, 2])
+    stalls = np.zeros(4, np.int64)
+    for _ in range(s.patience + 1):
+        b = s.pick_branch(classes, stalls)
+        advanced = classes == b
+        stalls[advanced] = 0
+        stalls[~advanced] += 1
+        if b == 2:
+            return
+    raise AssertionError("minority lane starved past the patience bound")
+
+
+# ---------------------------------------------------------------------------
+# Plan-aware admission
+# ---------------------------------------------------------------------------
+
+
+def test_plan_aware_empty_flight_is_fifo():
+    s = PlanAwareScheduler(window=3)
+    s.add(_req(0, [2, 2]))
+    s.add(_req(1, [0, 0]))
+    assert s.next_request([]).rid == 0
+
+
+def test_plan_aware_window_one_is_fifo():
+    s = PlanAwareScheduler(window=1)
+    s.add(_req(0, [2, 2]))
+    s.add(_req(1, [0, 0]))
+    assert s.next_request([np.zeros(2, np.int32)]).rid == 0
+
+
+def test_plan_aware_prefers_aligned_request():
+    s = PlanAwareScheduler(window=4)
+    s.add(_req(0, [2, 2, 2]))  # misaligned with the all-FULL flight
+    s.add(_req(1, [0, 0, 0]))  # aligned
+    got = s.next_request([np.zeros(3, np.int32), np.zeros(3, np.int32)])
+    assert got.rid == 1
+    # the skipped request is still queued, FIFO-first
+    assert s.next_request([]).rid == 0
+    assert len(s) == 0
+
+
+def test_plan_aware_fifo_wins_ties():
+    s = PlanAwareScheduler(window=4)
+    s.add(_req(0, [0, 0]))
+    s.add(_req(1, [0, 0]))
+    assert s.next_request([np.zeros(2, np.int32)]).rid == 0
+
+
+def test_plan_aware_head_cannot_starve():
+    """A misaligned queue head is bypassed at most max_head_skips times
+    before aging forces its admission, even if better-aligned requests
+    keep arriving."""
+    s = PlanAwareScheduler(window=4)
+    flight = [np.zeros(3, np.int32)]  # all-FULL lanes
+    s.add(_req(0, [2, 2, 2]))  # permanently misaligned head
+    admitted = []
+    for i in range(1, s.max_head_skips + 2):
+        s.add(_req(i, [0, 0, 0]))  # fresh aligned competitor each round
+        admitted.append(s.next_request(flight).rid)
+    assert 0 in admitted
+    assert admitted.index(0) <= s.max_head_skips
+
+
+def test_plan_aware_window_bounds_reordering():
+    s = PlanAwareScheduler(window=2)
+    s.add(_req(0, [2, 2]))
+    s.add(_req(1, [2, 2]))
+    s.add(_req(2, [0, 0]))  # best aligned but outside the window
+    got = s.next_request([np.zeros(2, np.int32)])
+    assert got.rid in (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_summary_math():
+    m = ServingMetrics()
+    m.record_step(4, 2, 2)
+    m.record_step(4, 4, 2)
+    m.record_completion(1.0, 0.25)
+    m.record_completion(3.0, 0.75)
+    m.wall_s = 2.0
+    s = m.summary()
+    assert s["requests"] == 2
+    assert s["throughput_req_s"] == 1.0
+    assert abs(s["p50_latency_s"] - 2.0) < 1e-6
+    assert s["micro_steps"] == 2
+    assert s["lane_steps_advanced"] == 4
+    assert abs(s["mean_occupancy"] - 0.75) < 1e-6
+    assert abs(s["mean_advance_eff"] - 0.75) < 1e-6
+    assert abs(s["mean_queue_wait_s"] - 0.5) < 1e-6

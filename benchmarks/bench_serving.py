@@ -1,4 +1,4 @@
-"""Serving throughput: static lockstep batching vs continuous batching.
+"""Serving throughput: static lockstep vs continuous vs cache-aware serving.
 
 Open-loop Poisson arrivals of text-conditioned generation requests with
 heterogeneous step counts, served on the toy U-Net by (a) the seed-style
@@ -12,10 +12,17 @@ member runs the batch max step count).  The headline acceptance row
 reports the continuous/static throughput speedup at the arrival rates
 where static batching leaves >= 25% of its lane-steps idle.
 
+``--cache cross`` additionally runs the cache-aware engine on the same
+stream (mixed PAS/full plans, prompts drawn from a small pool of popular
+base prompts with per-request jitter — the workload shape where requests
+actually share features) and reports the cache hit rate, the FULL U-Net
+step reduction vs the cache-off continuous baseline, and the throughputs.
+
 Usage:
   PYTHONPATH=src:. python benchmarks/bench_serving.py            # full sweep
   PYTHONPATH=src:. python benchmarks/bench_serving.py --smoke    # CI-sized
   PYTHONPATH=src:. python benchmarks/bench_serving.py --pas      # + PAS plans
+  PYTHONPATH=src:. python benchmarks/bench_serving.py --cache cross  # + cache
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ from repro.common.types import DiffusionConfig, PASPlan
 from repro.configs import get_unet_config
 from repro.models import unet as U
 from repro.serving import (
+    CacheAwareScheduler,
     DiffusionEngine,
     EngineConfig,
     GenRequest,
@@ -48,23 +56,51 @@ def pas_plan_for(timesteps: int, n_up: int) -> PASPlan:
 
 
 def make_stream(
-    ucfg, n_requests: int, rate_req_s: float, t_lo: int, t_hi: int, pas: bool, seed: int
+    ucfg,
+    n_requests: int,
+    rate_req_s: float,
+    t_lo: int,
+    t_hi: int,
+    pas: bool,
+    seed: int,
+    *,
+    mixed: bool = False,
+    prompt_pool: int = 0,
+    prompt_jitter: float = 0.0,
 ) -> list[GenRequest]:
-    """Poisson arrivals, step counts uniform in [t_lo, t_hi]."""
+    """Poisson arrivals, step counts uniform in [t_lo, t_hi].
+
+    ``mixed`` alternates PAS and all-FULL plans per request (the cache
+    bench's workload).  ``prompt_pool > 0`` draws each prompt as one of
+    ``prompt_pool`` shared base embeddings plus ``prompt_jitter`` noise —
+    the "popular prompt" regime where cross-request feature reuse exists.
+    """
     n_up = U.n_up_steps(ucfg)
     L = ucfg.latent_size**2
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_req_s, size=n_requests))
+    base = (
+        rng.normal(size=(prompt_pool, ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32) * 0.2
+        if prompt_pool > 0
+        else None
+    )
     reqs = []
     for i in range(n_requests):
         t = int(rng.integers(t_lo, t_hi + 1))
+        if base is not None:
+            ctx = base[int(rng.integers(prompt_pool))] + prompt_jitter * rng.normal(
+                size=(ucfg.ctx_len, ucfg.ctx_dim)
+            ).astype(np.float32)
+        else:
+            ctx = rng.normal(size=(ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32) * 0.2
+        use_pas = (i % 2 == 0) if mixed else pas
         reqs.append(
             GenRequest(
                 rid=i,
-                ctx=rng.normal(size=(ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32) * 0.2,
+                ctx=ctx,
                 noise=rng.normal(size=(L, ucfg.in_channels)).astype(np.float32),
                 timesteps=t,
-                plan=pas_plan_for(t, n_up) if pas else None,
+                plan=pas_plan_for(t, n_up) if use_pas else None,
                 arrival_s=float(arrivals[i]),
             )
         )
@@ -92,6 +128,33 @@ def bench_rate(engine, static, ucfg, args, rate, pas) -> dict:
     }
 
 
+def bench_cache(engine_off, engine_on, ucfg, args, rate) -> dict:
+    """Cache-off vs cache-on continuous serving on one mixed-plan stream."""
+    reqs = make_stream(
+        ucfg, args.requests, rate, args.t_lo, args.t_hi, False, args.seed,
+        mixed=True, prompt_pool=args.prompt_pool, prompt_jitter=args.prompt_jitter,
+    )
+    tag = f"cache={args.cache}/rate={rate:g}"
+    _, s_off = engine_off.run(reqs, realtime=True)
+    _, s_on = engine_on.run(reqs, realtime=True)
+    full_red = 1.0 - s_on["full_steps"] / max(s_off["full_steps"], 1)
+    speedup = s_on["throughput_req_s"] / max(s_off["throughput_req_s"], 1e-9)
+    emit("serving", f"{tag}/off/full_steps", s_off["full_steps"], "steps")
+    emit("serving", f"{tag}/on/full_steps", s_on["full_steps"], "steps")
+    emit("serving", f"{tag}/on/demoted_full_steps", s_on["demoted_full_steps"], "steps")
+    emit("serving", f"{tag}/on/hit_rate", s_on["cache_hit_rate"], "")
+    emit("serving", f"{tag}/full_step_reduction", round(full_red, 3), "")
+    emit("serving", f"{tag}/off/throughput_req_s", s_off["throughput_req_s"], "req/s")
+    emit("serving", f"{tag}/on/throughput_req_s", s_on["throughput_req_s"], "req/s")
+    emit("serving", f"{tag}/throughput_speedup", round(speedup, 3), "x", "cache on vs off")
+    return {
+        "rate": rate,
+        "hit_rate": s_on["cache_hit_rate"],
+        "full_step_reduction": full_red,
+        "speedup": speedup,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=42)
@@ -103,6 +166,18 @@ def main() -> None:
         help="Poisson arrival rates in req/s (default: calibrated to the machine)",
     )
     ap.add_argument("--pas", action="store_true", help="also sweep phase-aware plans")
+    ap.add_argument(
+        "--cache", choices=["off", "intra", "cross"], default="off",
+        help="also bench the feature cache (mixed-plan pooled-prompt stream)",
+    )
+    ap.add_argument("--cache-threshold", type=float, default=0.3)
+    ap.add_argument("--cache-slots", type=int, default=24)
+    ap.add_argument("--cache-bucket", type=int, default=125)
+    ap.add_argument(
+        "--prompt-pool", type=int, default=4,
+        help="number of shared base prompts in the cache workload",
+    )
+    ap.add_argument("--prompt-jitter", type=float, default=0.02)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
     args = ap.parse_args()
@@ -161,6 +236,48 @@ def main() -> None:
         emit(
             "serving", "acceptance/speedup_at_idle>=0.25", round(best["speedup"], 3), "x",
             f"idle={best['idle_lane_frac']}",
+        )
+
+    if args.cache != "off":
+        engine_off = engine  # the already-warmed cache-off continuous engine
+        cache_cfg = EngineConfig(
+            n_lanes=args.lanes,
+            max_steps=args.t_hi,
+            l_sketch=min(3, n_up),
+            l_refine=min(2, n_up),
+            decode_images=False,
+            cache_mode=args.cache,
+            cache_slots=args.cache_slots,
+            cache_threshold=args.cache_threshold,
+            cache_t_bucket=args.cache_bucket,
+        )
+        engine_on = DiffusionEngine(
+            ucfg, dcfg, params, None, cache_cfg, scheduler=CacheAwareScheduler(window=4)
+        )
+        warm = make_stream(
+            ucfg, 2 * args.lanes, 1e9, args.t_lo, args.t_hi, False, 7,
+            mixed=True, prompt_pool=args.prompt_pool, prompt_jitter=args.prompt_jitter,
+        )
+        engine_on.run(warm)  # compile the cached micro-step + insert scatter
+        # default: the two mid/high calibrated rates — the saturation region
+        # where FULL-step savings translate into throughput
+        cache_rates = args.rates if args.rates is not None else sorted(
+            {r["rate"] for r in results}
+        )[-2:]
+        cache_results = [
+            bench_cache(engine_off, engine_on, ucfg, args, rate) for rate in cache_rates
+        ]
+        best = max(cache_results, key=lambda r: r["full_step_reduction"])
+        emit(
+            "serving", "acceptance/cache_hit_rate", round(best["hit_rate"], 3), "",
+            f"mode={args.cache}",
+        )
+        emit(
+            "serving",
+            "acceptance/cache_full_step_reduction",
+            round(best["full_step_reduction"], 3),
+            "",
+            f"target>=0.10 mode={args.cache} threshold={args.cache_threshold}",
         )
 
 

@@ -75,8 +75,13 @@ def cfg_unet_step(
     return e_u + guidance * (e_c - e_u), cap
 
 
-def _feat_shape(ucfg: UNetConfig, entry_step: int, batch: int) -> tuple[int, ...]:
-    """Shape of the main-branch feature entering ``entry_step``."""
+def feat_shape(ucfg: UNetConfig, entry_step: int, batch: int) -> tuple[int, ...]:
+    """Shape of the main-branch feature entering ``entry_step``.
+
+    This is the tensor the FULL branch captures and the partial branches
+    consume — and therefore also the per-slot geometry of the serving
+    feature cache (``repro.serving.cache``).
+    """
     chans = [ucfg.base_channels * m for m in ucfg.channel_mult]
     plan = U._up_plan(ucfg)
     lvl = plan[entry_step][0]
@@ -88,6 +93,9 @@ def _feat_shape(ucfg: UNetConfig, entry_step: int, batch: int) -> tuple[int, ...
         prev_lvl = plan[entry_step - 1][0]
         c = chans[prev_lvl]
     return (batch, size * size, c)
+
+
+_feat_shape = feat_shape  # back-compat alias (pre-cache callers)
 
 
 def pas_denoise(

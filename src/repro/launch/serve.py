@@ -11,9 +11,16 @@ seed's fixed-size lockstep batching for comparison.
 against the KV cache (the ``decode_*`` dry-run cells lower exactly this
 step function).
 
+``--cache`` arms the cross-request feature cache (``repro.serving.cache``)
+on the continuous engine: ``intra`` lets a request reuse its own FULL-step
+captures (DeepCache-style), ``cross`` lets requests with nearby prompts and
+timesteps reuse each other's, with ``--cache-threshold`` as the
+quality/reuse knob (0 = bit-exact with ``off``).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --requests 8
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --engine static
+  PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --cache cross
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma3-1b --requests 4
 """
 from __future__ import annotations
@@ -33,6 +40,7 @@ from repro.launch.steps import get_adapter
 from repro.models import unet as U
 from repro.models import vae as V
 from repro.serving import (
+    CacheAwareScheduler,
     DiffusionEngine,
     EngineConfig,
     GenRequest,
@@ -118,21 +126,34 @@ def serve_diffusion(args) -> dict:
     engine_kind = getattr(args, "engine", "continuous")
 
     if engine_kind == "static":
+        if getattr(args, "cache", "off") != "off":
+            raise SystemExit(
+                "--cache requires the continuous engine (lockstep batches have "
+                "no per-lane micro-steps to demote); drop --engine static or --cache"
+            )
         plan_fn = (lambda t: default_pas_plan(t, n_up)) if args.pas else (lambda t: None)
         done, summary = serve_static(
             ucfg, dcfg, params, vae_params, reqs, args.batch, plan_fn=plan_fn
         )
     else:
+        cache_mode = getattr(args, "cache", "off")
         cfg = EngineConfig(
             n_lanes=args.batch,
             max_steps=args.timesteps,
             l_sketch=min(3, n_up),
             l_refine=min(2, n_up),
+            cache_mode=cache_mode,
+            cache_slots=getattr(args, "cache_slots", 16),
+            cache_threshold=getattr(args, "cache_threshold", 0.15),
+            cache_t_bucket=getattr(args, "cache_bucket", 125),
         )
-        engine = DiffusionEngine(
-            ucfg, dcfg, params, vae_params, cfg,
-            scheduler=PlanAwareScheduler(window=getattr(args, "window", 4)),
+        window = getattr(args, "window", 4)
+        scheduler = (
+            CacheAwareScheduler(window=window)
+            if cache_mode != "off"
+            else PlanAwareScheduler(window=window)
         )
+        engine = DiffusionEngine(ucfg, dcfg, params, vae_params, cfg, scheduler=scheduler)
         done, summary = engine.run(reqs)
 
     assert sorted(r.rid for r in done) == list(range(args.requests))
@@ -228,6 +249,24 @@ def main() -> None:
         help="step-level continuous batching vs fixed-size lockstep batches",
     )
     ap.add_argument("--window", type=int, default=4, help="plan-aware admission window")
+    ap.add_argument(
+        "--cache",
+        choices=["off", "intra", "cross"],
+        default="off",
+        help="feature cache: intra = a request reuses its own captures "
+        "(DeepCache-style), cross = requests reuse each other's (continuous "
+        "engine only)",
+    )
+    ap.add_argument(
+        "--cache-threshold", type=float, default=0.15,
+        help="prompt-signature shift-score bound for a cache hit (0 = never "
+        "hit; larger = more reuse, lower fidelity)",
+    )
+    ap.add_argument("--cache-slots", type=int, default=16, help="feature-cache ring size")
+    ap.add_argument(
+        "--cache-bucket", type=int, default=125,
+        help="timestep bucket width (train-timestep units) for cache keys",
+    )
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)

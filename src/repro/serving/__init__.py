@@ -1,10 +1,17 @@
 """Step-level continuous-batching serving for the PAS diffusion sampler.
 
 * ``lanes``     — per-lane sampler state (``LaneState``) + jitted micro-step
-* ``scheduler`` — admission queue packing policies (FIFO, plan-aware)
+* ``cache``     — cross-request feature cache (device slots + host LRU keys)
+* ``scheduler`` — admission queue packing policies (FIFO, plan-/cache-aware)
 * ``engine``    — the continuous-batching event loop + static baseline
-* ``metrics``   — latency percentiles, throughput, lane occupancy
+* ``metrics``   — latency percentiles, throughput, lane occupancy, hit rate
 """
+from repro.serving.cache import (
+    CacheState,
+    FeatureCache,
+    prompt_signature,
+    signature_distance,
+)
 from repro.serving.engine import (
     CompletedRequest,
     DiffusionEngine,
@@ -15,18 +22,27 @@ from repro.serving.engine import (
 )
 from repro.serving.lanes import LaneState, make_plan_arrays
 from repro.serving.metrics import ServingMetrics
-from repro.serving.scheduler import FIFOScheduler, PlanAwareScheduler
+from repro.serving.scheduler import (
+    CacheAwareScheduler,
+    FIFOScheduler,
+    PlanAwareScheduler,
+)
 
 __all__ = [
+    "CacheAwareScheduler",
+    "CacheState",
     "CompletedRequest",
     "DiffusionEngine",
     "EngineConfig",
     "FIFOScheduler",
+    "FeatureCache",
     "GenRequest",
     "LaneState",
     "PlanAwareScheduler",
     "ServingMetrics",
     "StaticServer",
     "make_plan_arrays",
+    "prompt_signature",
     "serve_static",
+    "signature_distance",
 ]

@@ -1,0 +1,333 @@
+"""Cross-request feature cache for the continuous-batching engine.
+
+The paper's Key Observation 1 — high-level U-Net features barely move
+between adjacent denoise steps — is what PAS exploits *within* one request
+(the FULL steps refresh a sketch/refine feature pair that the partial steps
+consume).  The same similarity holds *across* requests: two requests at
+nearby timesteps whose prompts are close produce nearly identical mid-block
+features (DeepCache / SADA observation).  This module stores the features
+the engine's FULL steps already capture and lets *other* lanes consume them,
+turning would-be FULL micro-steps into SKETCH micro-steps.
+
+Split of responsibilities:
+
+* **Device**: a fixed-size ring of feature slots (:class:`CacheState`, one
+  pytree of ``[S, 2, L, C]`` arrays — cond/uncond pairs in the engine's
+  CFG-doubled layout).  Insert is a jitted scatter from the lane arrays;
+  lookup inside the jitted micro-step is a gather by a per-lane slot index
+  (``feat_source``; -1 = use the lane's own features).  Feature tensors
+  never cross the host boundary.
+* **Host**: per-slot keys — timestep bucket + prompt-embedding signature —
+  plus validity, owner rid and an LRU clock.  Hit policy is a shift-score
+  style relative distance (paper Eq. 1, applied to pooled prompt
+  embeddings): ``||sig - slot_sig|| / ||slot_sig|| < threshold``.  The
+  inequality is *strict*, so ``threshold=0`` can never hit and is
+  guaranteed bit-exact with the cache-off engine (the golden-latent
+  harness pins this).
+
+Modes are disjoint reuse scopes: ``"intra"`` restricts hits to slots
+inserted by the same request (DeepCache-style self reuse — a lane skips
+its own scheduled FULL refreshes, where the signature distance is 0 by
+construction and the timestep bucket is the only gate); ``"cross"``
+restricts hits to *other* requests' slots, so the threshold genuinely
+measures cross-prompt distance — a request can never satisfy it with its
+own refreshed slot at distance exactly 0, and reported cross hits are
+always real cross-request sharing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.types import UNetConfig
+from repro.core import sampler as SM
+
+
+class CacheState(NamedTuple):
+    """Device-resident feature slots, lane-cache layout per slot.
+
+    Row 0 of the pair axis is the cond feature, row 1 the uncond feature
+    (matching rows ``i`` / ``N + i`` of the engine's CFG-doubled lane
+    caches), so a slot drops into a lane without any transpose.
+    """
+
+    f_sk: jax.Array  # [S, 2, L_sk, C_sk] sketch-entry features
+    f_rf: jax.Array  # [S, 2, L_rf, C_rf] refine-entry features
+
+    @property
+    def n_slots(self) -> int:
+        return self.f_sk.shape[0]
+
+
+def prompt_signature(ctx: np.ndarray) -> np.ndarray:
+    """Pooled prompt-embedding signature used as the cache key ([ctx_dim])."""
+    return np.asarray(ctx, np.float32).mean(axis=0)
+
+
+def signature_distance(sig: np.ndarray, ref: np.ndarray) -> float:
+    """Shift-score-style relative distance (paper Eq. 1 on pooled prompts)."""
+    ref = np.asarray(ref, np.float32)
+    return float(np.linalg.norm(np.asarray(sig, np.float32) - ref) / (np.linalg.norm(ref) + 1e-12))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _insert_slots(
+    cache: CacheState,
+    f_sk: jax.Array,  # [2N, L_sk, C_sk] lane sketch cache
+    f_rf: jax.Array,  # [2N, L_rf, C_rf] lane refine cache
+    lanes: jax.Array,  # [K] int32 source lanes
+    slots: jax.Array,  # [K] int32 target slots; >= n_slots marks padding
+) -> CacheState:
+    """Batched slot fill: one scatter dispatch for all of a micro-step's
+    FULL captures.  Padding entries carry an out-of-range slot and are
+    dropped by the scatter."""
+    n = f_sk.shape[0] // 2
+    pair = lambda a: jnp.stack([a[lanes], a[n + lanes]], axis=1)  # [K, 2, L, C]
+    return CacheState(
+        f_sk=cache.f_sk.at[slots].set(pair(f_sk), mode="drop"),
+        f_rf=cache.f_rf.at[slots].set(pair(f_rf), mode="drop"),
+    )
+
+
+def select_entry_features(
+    own: jax.Array,  # [2N, L, C] lane-cache features
+    cached: jax.Array,  # [S, 2, L, C] cache slots
+    src: jax.Array,  # [N] int32 slot index per lane; -1 = own
+) -> jax.Array:
+    """Per-lane captured-vs-cached feature selection (inside the jitted
+    micro-step).  Pure gather + where: exact passthrough when ``src`` is all
+    -1, so the cache-enabled micro-step with no hits stays bit-identical."""
+    n = own.shape[0] // 2
+    pick = cached[jnp.clip(src, 0, cached.shape[0] - 1)]  # [N, 2, L, C]
+    use = (src >= 0)[:, None, None]
+    cond = jnp.where(use, pick[:, 0], own[:n])
+    unc = jnp.where(use, pick[:, 1], own[n:])
+    return jnp.concatenate([cond, unc], axis=0)
+
+
+class FeatureCache:
+    """Fixed-size LRU feature cache: device slots + host keys.
+
+    One instance is owned by a :class:`~repro.serving.engine.DiffusionEngine`;
+    the engine probes before each micro-step (host metadata only), passes the
+    winning slot per lane into the jitted micro-step as ``feat_source``, and
+    inserts fresh FULL-step captures afterwards.  All methods are host-cheap:
+    O(S) numpy over the slot metadata.
+    """
+
+    def __init__(
+        self,
+        ucfg: UNetConfig,
+        e_sk: int,
+        e_rf: int,
+        *,
+        n_slots: int = 16,
+        threshold: float = 0.15,
+        t_bucket: int = 125,
+        mode: str = "cross",
+        dtype=jnp.float32,
+    ):
+        if mode not in ("intra", "cross"):
+            raise ValueError(f"cache mode must be 'intra' or 'cross', got {mode!r}")
+        if n_slots < 1:
+            raise ValueError("cache needs at least one slot")
+        if threshold < 0:
+            raise ValueError("cache threshold must be >= 0")
+        if t_bucket < 1:
+            raise ValueError("timestep bucket width must be >= 1")
+        self.mode = mode
+        self.n_slots = n_slots
+        self.threshold = threshold
+        self.t_bucket = t_bucket
+        self._sk_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_sk, 1)[1:]
+        self._rf_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_rf, 1)[1:]
+        self._dtype = dtype
+        self.sig_dim = ucfg.ctx_dim
+        self.reset()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def reset(self) -> None:
+        """Drop all slots and counters (cold cache)."""
+        s = self.n_slots
+        self.state = CacheState(
+            f_sk=jnp.zeros(self._sk_shape, self._dtype),
+            f_rf=jnp.zeros(self._rf_shape, self._dtype),
+        )
+        self.bucket = np.full((s,), -1, np.int64)
+        self.sig = np.zeros((s, self.sig_dim), np.float32)
+        self.rid = np.full((s,), -1, np.int64)
+        self.valid = np.zeros((s,), bool)
+        self.last_use = np.zeros((s,), np.int64)
+        self._tick = 0
+        self.probes = 0
+        self.probe_hits = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    # -- keys ----------------------------------------------------------------
+
+    def bucket_of(self, t: int) -> int:
+        return int(t) // self.t_bucket
+
+    @property
+    def n_warm(self) -> int:
+        return int(self.valid.sum())
+
+    def _touch(self, slot: int) -> None:
+        self._tick += 1
+        self.last_use[slot] = self._tick
+
+    # -- lookup --------------------------------------------------------------
+
+    def probe(self, t: int, sig: np.ndarray, rid: int) -> int | None:
+        """Best matching warm slot for (timestep, signature), or None.
+
+        Read-only: no counters, no LRU touch (the admission policy uses this
+        to score queued requests without perturbing eviction order).
+        """
+        mask = self.valid & (self.bucket == self.bucket_of(t))
+        # disjoint scopes: intra = own slots only, cross = other requests'
+        # slots only (a request's own slot sits at distance 0 and would
+        # trivially pass any positive threshold)
+        mask &= (self.rid == rid) if self.mode == "intra" else (self.rid != rid)
+        if not mask.any():
+            return None
+        d = np.linalg.norm(self.sig - np.asarray(sig, np.float32), axis=1)
+        d = d / (np.linalg.norm(self.sig, axis=1) + 1e-12)
+        d = np.where(mask, d, np.inf)
+        best = int(np.argmin(d))
+        # strict: threshold 0 never hits (bit-exactness guarantee)
+        return best if d[best] < self.threshold else None
+
+    def lookup(self, t: int, sig: np.ndarray, rid: int) -> int | None:
+        """Probe + hit/miss accounting + LRU touch, as one call.
+
+        For callers that serve a request immediately on a hit.  The engine
+        instead probes speculatively (:meth:`probe`) and settles accounting
+        only for decisions that *execute* (:meth:`note_hit` /
+        :meth:`note_miss`), so branch-vote losers neither skew the stats
+        nor keep slots artificially warm.
+        """
+        slot = self.probe(t, sig, rid)
+        if slot is not None:
+            self.note_hit(slot)
+        else:
+            self.note_miss()
+        return slot
+
+    def note_hit(self, slot: int) -> None:
+        """An executed demotion consumed ``slot``: count it + touch LRU."""
+        self.probes += 1
+        self.probe_hits += 1
+        self._touch(slot)
+
+    def note_miss(self) -> None:
+        """A probed FULL step executed as FULL (no warm slot matched)."""
+        self.probes += 1
+
+    def plan_warmth(self, req) -> float:
+        """Fraction of a queued request's FULL steps that would hit now.
+
+        Duck-typed on the engine's ``GenRequest`` (needs ``_lane_plan`` and
+        ``_sig``); anything else scores 0 — schedulers stay usable with
+        plain fakes in tests.
+        """
+        lp = getattr(req, "_lane_plan", None)
+        sig = getattr(req, "_sig", None)
+        if lp is None or sig is None or not self.valid.any():
+            return 0.0
+        hits, fulls = 0, 0
+        for i in range(lp.n_steps):
+            if lp.branches[i] != SM.FULL:
+                continue
+            fulls += 1
+            if self.probe(int(lp.ts[i]), sig, getattr(req, "rid", -1)) is not None:
+                hits += 1
+        return hits / max(fulls, 1)
+
+    # -- insert --------------------------------------------------------------
+
+    def reserve(
+        self, t: int, sig: np.ndarray, rid: int, exclude: set[int] | tuple = ()
+    ) -> int | None:
+        """Claim a slot for (t, sig, rid) and update the host keys.
+
+        Slot choice: a valid slot already holding (rid, bucket) is refreshed
+        in place (a request's newer capture supersedes its older one in the
+        same bucket); otherwise the first empty slot; otherwise evict the
+        LRU slot.  Metadata-only — pair with :meth:`insert_many` (or use
+        :meth:`insert`) to fill the device slot.
+
+        ``exclude`` holds slots already claimed by *this* micro-step's batch
+        — a batched scatter with duplicate indices has unspecified winner
+        order, so a caller reserving several slots before one
+        :meth:`insert_many` must thread the claimed set through.  Returns
+        None when every slot is excluded (ring smaller than the batch):
+        that capture simply goes uncached.
+        """
+        b = self.bucket_of(t)
+        free = np.ones((self.n_slots,), bool)
+        for s in exclude:
+            free[s] = False
+        same = np.nonzero(free & self.valid & (self.rid == rid) & (self.bucket == b))[0]
+        if same.size:
+            slot = int(same[0])
+        else:
+            empty = np.nonzero(free & ~self.valid)[0]
+            if empty.size:
+                slot = int(empty[0])
+            else:
+                avail = np.nonzero(free)[0]
+                if not avail.size:
+                    return None
+                slot = int(avail[np.argmin(self.last_use[avail])])
+                self.evictions += 1
+        self.bucket[slot] = b
+        self.sig[slot] = np.asarray(sig, np.float32)
+        self.rid[slot] = rid
+        self.valid[slot] = True
+        self.inserts += 1
+        self._touch(slot)
+        return slot
+
+    def insert_many(
+        self, f_sk: jax.Array, f_rf: jax.Array, lanes: np.ndarray, slots: np.ndarray
+    ) -> None:
+        """Fill reserved slots from lane caches in one device scatter.
+
+        ``lanes``/``slots`` must have a fixed per-caller length (the engine
+        pads to ``n_lanes`` so the scatter compiles once); padding entries
+        carry ``slots[i] >= n_slots`` and are dropped device-side.
+        """
+        self.state = _insert_slots(
+            self.state, f_sk, f_rf,
+            jnp.asarray(lanes, jnp.int32), jnp.asarray(slots, jnp.int32),
+        )
+
+    def insert(
+        self, f_sk: jax.Array, f_rf: jax.Array, lane: int, t: int, sig: np.ndarray, rid: int
+    ) -> None:
+        """Single-capture convenience wrapper: reserve + fill one slot."""
+        slot = self.reserve(t, sig, rid)
+        assert slot is not None  # nothing excluded -> a slot always exists
+        self.insert_many(
+            f_sk, f_rf, np.asarray([lane], np.int32), np.asarray([slot], np.int32)
+        )
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "cache_mode": self.mode,
+            "cache_slots": self.n_slots,
+            "cache_warm_slots": self.n_warm,
+            "cache_probes": self.probes,
+            "cache_probe_hits": self.probe_hits,
+            "cache_inserts": self.inserts,
+            "cache_evictions": self.evictions,
+        }

@@ -31,6 +31,7 @@ from repro.core import sampler as SM
 from repro.models import unet as U
 from repro.models import vae as V
 from repro.serving import lanes as LN
+from repro.serving.cache import FeatureCache, prompt_signature
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import FIFOScheduler
 
@@ -52,8 +53,13 @@ class GenRequest:
     timesteps: int
     plan: PASPlan | None = None
     arrival_s: float = 0.0  # offset from stream start
+    #: opt-out for quality-critical requests: never serve this request's
+    #: FULL steps from cached features (neither another request's slots nor
+    #: its own intra-mode captures) — every planned FULL step runs in full
+    allow_cache: bool = True
 
     _lane_plan: LN.LanePlan | None = dataclasses.field(default=None, repr=False)
+    _sig: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
     def branch_vector(self) -> np.ndarray:
         assert self._lane_plan is not None, "request not yet submitted"
@@ -90,6 +96,23 @@ class EngineConfig:
     l_sketch: int = 3  # feature-cache geometry (see module docstring)
     l_refine: int = 2
     decode_images: bool = True
+    # -- cross-request feature cache (repro.serving.cache) -------------------
+    #: "off" | "intra" (hits restricted to the same request — DeepCache-style
+    #: self reuse) | "cross" (any request's warm slots)
+    cache_mode: str = "off"
+    cache_slots: int = 16
+    #: shift-score-style relative distance bound on prompt signatures; hits
+    #: require distance *strictly* below it, so 0.0 never hits (bit-exact)
+    cache_threshold: float = 0.15
+    #: timestep bucket width in train-timestep units
+    cache_t_bucket: int = 125
+    #: never demote a lane's first ``cache_min_step`` plan steps (protects
+    #: the PNDM warmup / the paper's semantic-planning phase)
+    cache_min_step: int = 1
+
+    def __post_init__(self):
+        if self.cache_mode not in ("off", "intra", "cross"):
+            raise ValueError(f"cache_mode must be off|intra|cross, got {self.cache_mode!r}")
 
 
 class DiffusionEngine:
@@ -111,10 +134,24 @@ class DiffusionEngine:
         self.scheduler = scheduler if scheduler is not None else FIFOScheduler()
         self.metrics = ServingMetrics()
 
+        self.cache: FeatureCache | None = None
+        if config.cache_mode != "off":
+            self.cache = FeatureCache(
+                ucfg, self.e_sk, self.e_rf,
+                n_slots=config.cache_slots,
+                threshold=config.cache_threshold,
+                t_bucket=config.cache_t_bucket,
+                mode=config.cache_mode,
+            )
+        if hasattr(self.scheduler, "attach_cache"):
+            self.scheduler.attach_cache(self.cache)
+
         self._state = LN.init_lanes(
             ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf
         )
-        self._micro = LN.make_micro_step(ucfg, dcfg, params, self.e_sk, self.e_rf)
+        self._micro = LN.make_micro_step(
+            ucfg, dcfg, params, self.e_sk, self.e_rf, cached=self.cache is not None
+        )
         self._admit = jax.jit(LN.admit, donate_argnums=(0,))
         self._decoder = None
         if vae_params is not None and config.decode_images:
@@ -145,6 +182,7 @@ class DiffusionEngine:
         req._lane_plan = LN.make_plan_arrays(
             self.dcfg, req.timesteps, req.plan, self.config.max_steps
         )
+        req._sig = prompt_signature(req.ctx)
         self.scheduler.add(req)
 
     # -- introspection ------------------------------------------------------
@@ -192,6 +230,31 @@ class DiffusionEngine:
             self._lane_admit_s[lane] = now_s
             self._stall[lane] = 0
 
+    def _probe_cache(self, active: list[int], planned: np.ndarray) -> dict[int, int]:
+        """Warm-slot probe for active lanes whose next planned step is FULL.
+
+        Returns {lane: slot} for the lanes whose FULL step can be served
+        from the cache this micro-step (host metadata only — the feature
+        tensors stay on device).  Probes are read-only: hit/miss counters
+        and LRU touches settle in :meth:`step` for the lanes that actually
+        advance, so a lane stuck behind the branch vote neither inflates
+        the stats nor keeps its candidate slot artificially warm.
+        """
+        hits: dict[int, int] = {}
+        if self.cache is None:
+            return hits
+        for k, lane in enumerate(active):
+            if planned[k] != SM.FULL:
+                continue
+            req = self._lane_req[lane]
+            if not req.allow_cache or self._lane_step[lane] < self.config.cache_min_step:
+                continue
+            t = int(req._lane_plan.ts[self._lane_step[lane]])
+            slot = self.cache.probe(t, req._sig, req.rid)
+            if slot is not None:
+                hits[lane] = slot
+        return hits
+
     def step(self, now_s: float = 0.0, clock: Callable[[], float] | None = None) -> list[CompletedRequest]:
         """Backfill, run one micro-step, retire finished lanes.
 
@@ -204,21 +267,77 @@ class DiffusionEngine:
         if not active:
             return []
 
-        lane_classes = np.array(
+        planned = np.array(
             [self._lane_req[i]._lane_plan.branches[self._lane_step[i]] for i in active],
             np.int64,
         )
-        b_star = self.scheduler.pick_branch(lane_classes, self._stall[active])
+        # cache demotion: a planned FULL step with a warm, close-enough slot
+        # executes as SKETCH consuming the cached features of another (or an
+        # earlier) FULL step.  The packing policy votes over the *effective*
+        # classes so demoted lanes amortize with planned SKETCH lanes.
+        hit_slots = self._probe_cache(active, planned)
+        effective = planned.copy()
+        for k, lane in enumerate(active):
+            if lane in hit_slots:
+                effective[k] = SM.SKETCH
+        b_star = self.scheduler.pick_branch(effective, self._stall[active])
 
-        self._state = self._micro(self._state, jnp.int32(b_star))
-        # the advance mask is deterministic from the host-known plans —
-        # mirror it here instead of syncing on the device (keeps dispatch async)
+        # the advance mask is deterministic from the host-known plans +
+        # cache metadata — mirror it here instead of syncing on the device
+        # (keeps dispatch async)
         sel = np.zeros((self.config.n_lanes,), bool)
-        sel[np.asarray(active)[lane_classes == b_star]] = True
+        advanced = np.asarray(active)[effective == b_star]
+        sel[advanced] = True
+        n_demoted = 0
+        if self.cache is not None:
+            feat_src = np.full((self.config.n_lanes,), -1, np.int32)
+            if b_star == SM.SKETCH:
+                for lane in advanced:
+                    slot = hit_slots.get(int(lane))
+                    if slot is not None:
+                        feat_src[lane] = slot
+                        self.cache.note_hit(slot)
+                        n_demoted += 1
+            self._state = self._micro(
+                self._state, jnp.int32(b_star), jnp.asarray(sel),
+                jnp.asarray(feat_src), self.cache.state,
+            )
+            if b_star == SM.FULL:
+                # fresh captures become warm slots: reserve host-side
+                # (conflict-free within the batch), then fill every slot in
+                # one batched device scatter (padded to n_lanes so the
+                # scatter compiles once)
+                lanes = np.zeros((self.config.n_lanes,), np.int32)
+                slots = np.full((self.config.n_lanes,), self.cache.n_slots, np.int32)
+                taken: set[int] = set()
+                for k, lane in enumerate(advanced):
+                    req = self._lane_req[lane]
+                    t = int(req._lane_plan.ts[self._lane_step[lane]])
+                    if req.allow_cache and self._lane_step[lane] >= self.config.cache_min_step:
+                        self.cache.note_miss()  # probed FULL executed as FULL
+                    if self.config.cache_mode == "intra" and not req.allow_cache:
+                        # only this request could ever consume the capture,
+                        # and it opted out — don't evict useful slots for it
+                        continue
+                    slot = self.cache.reserve(t, req._sig, req.rid, exclude=taken)
+                    if slot is None:  # ring smaller than the FULL batch
+                        continue
+                    taken.add(slot)
+                    lanes[k] = int(lane)
+                    slots[k] = slot
+                if taken:
+                    self.cache.insert_many(self._state.f_sk, self._state.f_rf, lanes, slots)
+        else:
+            self._state = self._micro(self._state, jnp.int32(b_star), jnp.asarray(sel))
+
         self._lane_step[sel] += 1
         self._stall[active] += 1
         self._stall[sel] = 0
-        self.metrics.record_step(self.config.n_lanes, len(active), int(sel.sum()))
+        n_full = len(advanced) if b_star == SM.FULL else 0
+        self.metrics.record_step(
+            self.config.n_lanes, len(active), int(sel.sum()),
+            n_full=n_full, n_demoted=n_demoted,
+        )
 
         done: list[CompletedRequest] = []
         for lane in active:
@@ -253,10 +372,14 @@ class DiffusionEngine:
         ``realtime=False`` ignores arrival offsets (everything is queued up
         front).  ``realtime=True`` replays ``arrival_s`` against the wall
         clock — the benchmark's Poisson open-loop mode.  The engine is
-        reusable: compiled micro-steps persist across calls and metrics
-        reset per call.
+        reusable: compiled micro-steps persist across calls; metrics and the
+        feature cache reset per call (a cold cache keeps ``run`` outputs a
+        deterministic function of the request stream — drive :meth:`step`
+        directly to serve with cross-call warmth).
         """
         self.metrics = ServingMetrics()
+        if self.cache is not None:
+            self.cache.reset()
         pending = sorted(requests, key=lambda r: r.arrival_s)
         t0 = time.perf_counter()
         clock = lambda: time.perf_counter() - t0
@@ -275,6 +398,8 @@ class DiffusionEngine:
             done.extend(self.step(now_s=clock(), clock=clock))
         self.metrics.wall_s = time.perf_counter() - t0
         summary = dict(self.metrics.summary(), mode="continuous", lanes=self.config.n_lanes)
+        if self.cache is not None:
+            summary.update(self.cache.stats())
         return done, summary
 
 

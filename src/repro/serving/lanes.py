@@ -35,6 +35,7 @@ import numpy as np
 from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
 from repro.core import sampler as SM
 from repro.models import diffusion as D
+from repro.serving.cache import select_entry_features
 
 Params = dict[str, Any]
 
@@ -109,8 +110,8 @@ def init_lanes(
         x=z((n_lanes, L, c), dtype),
         ets=z((n_lanes, 4, L, c), dtype),
         n_ets=z((n_lanes,), jnp.int32),
-        f_sk=z(SM._feat_shape(ucfg, e_sk, 2 * n_lanes), dtype),
-        f_rf=z(SM._feat_shape(ucfg, e_rf, 2 * n_lanes), dtype),
+        f_sk=z(SM.feat_shape(ucfg, e_sk, 2 * n_lanes), dtype),
+        f_rf=z(SM.feat_shape(ucfg, e_rf, 2 * n_lanes), dtype),
         ctx2=z((2 * n_lanes, ucfg.ctx_len, ucfg.ctx_dim), dtype),
         branches=z((n_lanes, max_steps), jnp.int32),
         ts=z((n_lanes, max_steps), jnp.int32),
@@ -165,33 +166,56 @@ def make_micro_step(
     params: Params,
     e_sk: int,
     e_rf: int,
+    *,
+    cached: bool = False,
 ):
     """Build the jitted continuous-batching micro-step.
 
     The returned function advances, by exactly one denoise step, every
-    active lane whose *current* branch class equals the scalar ``b_star``
-    chosen by the packing policy — one batched ``lax.switch``-selected U-Net
+    active lane the host-chosen advance mask ``sel`` selects (the lanes
+    whose *effective* branch class equals the scalar ``b_star`` chosen by
+    the packing policy) — one batched ``lax.switch``-selected U-Net
     invocation for the whole lane batch, so a micro-step costs the same as
     one step of an equally wide static batch.  Lanes in other branch
     classes (and empty lanes) are carried through untouched via masking.
+    ``sel`` comes from the host because the cache-aware engine may *demote*
+    a lane's planned FULL step to SKETCH, which the device-side plan alone
+    cannot see.
+
+    ``cached=False`` — signature ``(state, b_star, sel)``: partial branches
+    consume the lane's own captured features (the PR 1 behaviour).
+
+    ``cached=True`` — signature ``(state, b_star, sel, feat_src, cache)``:
+    ``feat_src`` is a per-lane int32 slot index into the device-resident
+    feature cache (-1 = own features); the SKETCH branch consumes the
+    selected entry and, for advanced lanes, the selection also becomes the
+    lane's sketch/refine cache, so the lane's later partial steps stay
+    consistent with whatever its last (possibly demoted) FULL step used.
+    With ``feat_src`` all -1 the selection is an exact passthrough — the
+    cache-enabled micro-step with no hits is bit-identical to ``cached=
+    False`` (the golden-latent harness pins this).
 
     The step returns only the new state (no per-step host readback): the
-    advance mask is deterministic from the host-known plans, so the engine
-    mirrors it host-side and the device stays on the async-dispatch fast
-    path.  The input state is donated — callers must drop their reference.
+    advance mask is deterministic from the host-known plans + cache
+    metadata, so the engine mirrors it host-side and the device stays on
+    the async-dispatch fast path.  The input state is donated — callers
+    must drop their reference.
     """
     sched = D.make_schedule(dcfg)
     guidance = dcfg.guidance_scale
     use_pndm = dcfg.scheduler == "pndm"
 
-    def micro_step(state: LaneState, b_star: jax.Array) -> LaneState:
-        n = state.n_lanes
+    def _body(
+        state: LaneState,
+        b_star: jax.Array,
+        sel: jax.Array,  # [N] bool host-computed advance mask
+        entry_sk: jax.Array,  # [2N, ...] features the SKETCH branch consumes
+        entry_rf: jax.Array,  # [2N, ...] features the REFINE branch consumes
+    ) -> LaneState:
         idx = jnp.minimum(state.step, state.branches.shape[1] - 1)
         take = lambda a: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
-        cur_br = take(state.branches)
         t = take(state.ts)
         tp = take(state.t_prev)
-        sel = state.active_mask() & (cur_br == b_star)
         ctx2 = state.ctx2
 
         def full_branch(_):
@@ -203,16 +227,16 @@ def make_micro_step(
         def sketch_branch(_):
             eps, _ = SM.cfg_unet_step(
                 ucfg, params, guidance, state.x, t, ctx2,
-                entry_step=e_sk, entry_feat=state.f_sk,
+                entry_step=e_sk, entry_feat=entry_sk,
             )
-            return eps, state.f_sk, state.f_rf
+            return eps, entry_sk, entry_rf
 
         def refine_branch(_):
             eps, _ = SM.cfg_unet_step(
                 ucfg, params, guidance, state.x, t, ctx2,
-                entry_step=e_rf, entry_feat=state.f_rf,
+                entry_step=e_rf, entry_feat=entry_rf,
             )
-            return eps, state.f_sk, state.f_rf
+            return eps, entry_sk, entry_rf
 
         eps, f_sk_new, f_rf_new = jax.lax.switch(
             jnp.clip(b_star, 0, 2), (full_branch, sketch_branch, refine_branch), None
@@ -237,4 +261,22 @@ def make_micro_step(
             step=state.step + sel.astype(jnp.int32),
         )
 
-    return jax.jit(micro_step, donate_argnums=(0,))
+    if not cached:
+
+        def micro_step(state: LaneState, b_star: jax.Array, sel: jax.Array) -> LaneState:
+            return _body(state, b_star, sel, state.f_sk, state.f_rf)
+
+        return jax.jit(micro_step, donate_argnums=(0,))
+
+    def micro_step_cached(
+        state: LaneState,
+        b_star: jax.Array,
+        sel: jax.Array,
+        feat_src: jax.Array,  # [N] int32 cache slot per lane, -1 = own
+        cache,  # CacheState pytree of [S, 2, ...] slots
+    ) -> LaneState:
+        entry_sk = select_entry_features(state.f_sk, cache.f_sk, feat_src)
+        entry_rf = select_entry_features(state.f_rf, cache.f_rf, feat_src)
+        return _body(state, b_star, sel, entry_sk, entry_rf)
+
+    return jax.jit(micro_step_cached, donate_argnums=(0,))

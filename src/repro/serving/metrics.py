@@ -21,11 +21,24 @@ class ServingMetrics:
     advance_eff: list[float] = dataclasses.field(default_factory=list)
     micro_steps: int = 0
     lane_steps_advanced: int = 0
+    #: FULL lane-steps actually executed (each one a full U-Net pass)
+    full_steps: int = 0
+    #: planned-FULL lane-steps served from the feature cache as SKETCH
+    demoted_steps: int = 0
     wall_s: float = 0.0
 
-    def record_step(self, n_lanes: int, n_active: int, n_advanced: int) -> None:
+    def record_step(
+        self,
+        n_lanes: int,
+        n_active: int,
+        n_advanced: int,
+        n_full: int = 0,
+        n_demoted: int = 0,
+    ) -> None:
         self.micro_steps += 1
         self.lane_steps_advanced += n_advanced
+        self.full_steps += n_full
+        self.demoted_steps += n_demoted
         self.occupancy.append(n_active / max(n_lanes, 1))
         if n_active:
             self.advance_eff.append(n_advanced / n_active)
@@ -54,4 +67,10 @@ class ServingMetrics:
             "mean_advance_eff": round(float(np.mean(self.advance_eff)), 3)
             if self.advance_eff
             else 0.0,
+            "full_steps": self.full_steps,
+            "demoted_full_steps": self.demoted_steps,
+            # fraction of planned FULL lane-steps served from the cache
+            "cache_hit_rate": round(
+                self.demoted_steps / max(self.full_steps + self.demoted_steps, 1), 3
+            ),
         }

@@ -98,19 +98,68 @@ class PlanAwareScheduler(FIFOScheduler):
                 score += float(np.mean(req_branches[:m] == lb[:m]))
         return score
 
+    # -- subclass hooks ------------------------------------------------------
+
+    def _score(self, req, lane_branches: Sequence[np.ndarray]) -> float:
+        """Admission preference for one windowed request (higher = sooner)."""
+        return self._alignment(req.branch_vector(), lane_branches)
+
+    def _consider_window(self, lane_branches: Sequence[np.ndarray]) -> bool:
+        """Whether window scoring can beat plain FIFO right now."""
+        return len(lane_branches) > 0
+
     def next_request(self, lane_branches: Sequence[np.ndarray] = ()):
         if not self._queue:
             return None
         if (
-            len(lane_branches) == 0
+            not self._consider_window(lane_branches)
             or self.window == 1
             or self._head_skips >= self.max_head_skips
         ):
             self._head_skips = 0
             return self._queue.popleft()
         window = list(self._queue)[: self.window]
-        scores = [self._alignment(r.branch_vector(), lane_branches) for r in window]
+        scores = [self._score(r, lane_branches) for r in window]
         best = int(np.argmax(scores))  # stable: FIFO wins ties
         self._head_skips = self._head_skips + 1 if best else 0
         self._queue.remove(window[best])
         return window[best]
+
+
+class CacheAwareScheduler(PlanAwareScheduler):
+    """Plan-aware admission that also prefers cache-warm requests.
+
+    The windowed score adds ``warmth_weight * plan_warmth`` — the fraction
+    of the request's FULL steps that would hit a warm feature-cache slot
+    right now (same timestep bucket, prompt signature within threshold; see
+    :meth:`repro.serving.cache.FeatureCache.plan_warmth`).  Admitting a
+    warm request converts its FULL steps into cache-served SKETCH steps,
+    which is worth more than branch alignment alone, so warmth dominates by
+    default.  Starvation bounds are inherited unchanged: the queue head is
+    still forced after ``max_head_skips`` bypasses, and ``window`` bounds
+    reordering regardless of warmth.
+
+    Without an attached cache (or with a cold one) this degrades exactly to
+    :class:`PlanAwareScheduler`.
+    """
+
+    def __init__(self, window: int = 4, warmth_weight: float = 2.0):
+        super().__init__(window)
+        self.warmth_weight = warmth_weight
+        self.cache = None
+
+    def attach_cache(self, cache) -> None:
+        """Called by the engine that owns the :class:`FeatureCache`."""
+        self.cache = cache
+
+    def _score(self, req, lane_branches: Sequence[np.ndarray]) -> float:
+        score = super()._score(req, lane_branches)
+        if self.cache is not None:
+            score += self.warmth_weight * self.cache.plan_warmth(req)
+        return score
+
+    def _consider_window(self, lane_branches: Sequence[np.ndarray]) -> bool:
+        # warmth can rank requests even when no lanes are in flight
+        if self.cache is not None and self.cache.n_warm > 0:
+            return True
+        return super()._consider_window(lane_branches)

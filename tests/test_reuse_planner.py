@@ -78,6 +78,60 @@ def test_summary_reduction_band():
     assert summary["n_input_reuse"] + summary["n_weight_reuse"] + summary["n_tiled"] == len(layers)
 
 
+# ---------------------------------------------------------------------------
+# Edge cases: degenerate budgets, degenerate networks, dtype widths
+# ---------------------------------------------------------------------------
+
+
+def test_zero_buffer_budget_everything_tiled():
+    """A zero-byte buffer can keep nothing resident: every layer must fall
+    back to tiled streaming and still beat the im2col baseline."""
+    layers = RP.unet_conv_layers(get_unet_config("sd_v14"))
+    plans = RP.plan_layers(layers, 0)
+    for p in plans:
+        assert p.reuse == "tiled"
+        assert p.fusion == "none"
+        assert p.traffic_optimized <= p.traffic_baseline
+
+
+def test_tiny_buffer_budget_invariant_holds():
+    for budget in (1, 64, 4096):
+        plans = RP.plan_layers(RP.unet_conv_layers(get_unet_config("sd_v14")), budget)
+        for p in plans:
+            assert p.traffic_optimized <= p.traffic_baseline
+
+
+def test_single_layer_network_never_fuses():
+    lay = RP.LayerSizes("only", weight=MB, act_in=2 * MB, act_out=2 * MB)
+    for budget in (0, MB // 2, 2 * MB, 64 * MB):
+        plans = RP.plan_layers([lay], budget)
+        assert len(plans) == 1
+        assert plans[0].fusion == "none"  # no successor to fuse into
+        assert plans[0].traffic_optimized <= plans[0].traffic_baseline
+
+
+def test_dtype_bytes_variants():
+    """Layer byte sizes must scale linearly with dtype width (MACs must
+    not), and the optimized<=baseline invariant must hold at every width."""
+    cfg = get_unet_config("sd_v14")
+    ref = RP.unet_conv_layers(cfg, dtype_bytes=1)
+    for db in (1, 2, 4, 8):
+        layers = RP.unet_conv_layers(cfg, dtype_bytes=db)
+        for lay, base in zip(layers, ref):
+            assert lay.weight == db * base.weight
+            assert lay.act_in == db * base.act_in
+            assert lay.act_out == db * base.act_out
+            assert lay.macs == base.macs
+        for p in RP.plan_layers(layers, 2 * MB):
+            assert p.traffic_optimized <= p.traffic_baseline
+
+
+def test_buffer_sweep_handles_degenerate_sizes():
+    layers = RP.unet_conv_layers(get_unet_config("sd_toy"))
+    sweep = RP.buffer_sweep(layers, [0, 1, 2 * MB])
+    assert sweep[0] >= sweep[1] >= sweep[2 * MB] > 0
+
+
 @given(
     w=st.integers(1, 64), ai=st.integers(1, 64), ao=st.integers(1, 64),
     buf=st.integers(1, 64),

@@ -1,0 +1,348 @@
+"""Cross-request feature cache: key/LRU semantics, micro-step feature
+selection, and engine-level reuse (demotion) correctness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.types import DiffusionConfig, PASPlan
+from repro.configs import get_unet_config
+from repro.core import sampler as SM
+from repro.models import unet as U
+from repro.serving import (
+    CacheAwareScheduler,
+    DiffusionEngine,
+    EngineConfig,
+    FeatureCache,
+    GenRequest,
+    prompt_signature,
+    signature_distance,
+)
+from repro.serving.cache import select_entry_features
+
+TOY = get_unet_config("sd_toy")
+N_UP = U.n_up_steps(TOY)
+L = TOY.latent_size**2
+L_SK, L_RF = min(3, N_UP), min(2, N_UP)
+E_SK, E_RF = N_UP - L_SK, N_UP - L_RF
+DCFG = DiffusionConfig(timesteps_sample=6)
+
+
+def _cache(**kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("threshold", 0.2)
+    kw.setdefault("t_bucket", 100)
+    kw.setdefault("mode", "cross")
+    return FeatureCache(TOY, E_SK, E_RF, **kw)
+
+
+def _lane_feats(n_lanes=2, fill=1.0):
+    f_sk = jnp.full(SM.feat_shape(TOY, E_SK, 2 * n_lanes), fill, jnp.float32)
+    f_rf = jnp.full(SM.feat_shape(TOY, E_RF, 2 * n_lanes), fill, jnp.float32)
+    return f_sk, f_rf
+
+
+def _plan(t):
+    return PASPlan(
+        t_sketch=max(2, t // 2 + 1), t_complete=2, t_sparse=2,
+        l_sketch=L_SK, l_refine=L_RF,
+    )
+
+
+def _request(rid, t, plan, *, noise_seed=None, ctx=None):
+    rng = np.random.default_rng(300 + (noise_seed if noise_seed is not None else rid))
+    return GenRequest(
+        rid=rid,
+        ctx=ctx if ctx is not None
+        else rng.normal(size=(TOY.ctx_len, TOY.ctx_dim)).astype(np.float32) * 0.2,
+        noise=rng.normal(size=(L, TOY.in_channels)).astype(np.float32),
+        timesteps=t,
+        plan=plan,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side key / LRU semantics (no U-Net)
+# ---------------------------------------------------------------------------
+
+
+def test_signature_helpers():
+    ctx = np.ones((4, 8), np.float32)
+    sig = prompt_signature(ctx)
+    assert sig.shape == (8,)
+    assert signature_distance(sig, sig) == 0.0
+    assert signature_distance(2 * sig, sig) == pytest.approx(1.0)
+
+
+def test_cache_rejects_bad_config():
+    with pytest.raises(ValueError):
+        _cache(mode="sideways")
+    with pytest.raises(ValueError):
+        _cache(n_slots=0)
+    with pytest.raises(ValueError):
+        _cache(threshold=-0.1)
+
+
+def test_probe_requires_same_bucket_and_close_signature():
+    c = _cache()
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=0, t=250, sig=sig, rid=7)
+    assert c.probe(260, sig, rid=9) == 0  # same bucket, distance 0
+    assert c.probe(450, sig, rid=9) is None  # different bucket
+    assert c.probe(260, 10 * sig, rid=9) is None  # far signature
+
+
+def test_threshold_zero_never_hits():
+    c = _cache(threshold=0.0)
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=0, t=250, sig=sig, rid=7)
+    # identical key, distance exactly 0 — strict inequality must miss
+    assert c.probe(250, sig, rid=9) is None
+
+
+def test_intra_mode_restricts_to_same_rid():
+    c = _cache(mode="intra")
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=0, t=250, sig=sig, rid=7)
+    assert c.probe(250, sig, rid=8) is None
+    assert c.probe(250, sig, rid=7) == 0
+
+
+def test_cross_mode_excludes_own_slots():
+    """A request's own refreshed slot sits at signature distance exactly 0;
+    cross mode must never let it satisfy the threshold (that reuse scope is
+    what intra mode is for)."""
+    c = _cache(mode="cross", threshold=0.5)
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=0, t=250, sig=sig, rid=7)
+    assert c.probe(260, sig, rid=7) is None  # own slot: excluded
+    assert c.probe(260, sig, rid=8) == 0  # someone else's request: hit
+
+
+def test_insert_refreshes_same_rid_bucket_slot():
+    c = _cache()
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=0, t=250, sig=sig, rid=7)
+    c.insert(f_sk, f_rf, lane=0, t=260, sig=sig, rid=7)  # same bucket
+    assert c.n_warm == 1  # refreshed in place, not duplicated
+    c.insert(f_sk, f_rf, lane=0, t=450, sig=sig, rid=7)  # new bucket
+    assert c.n_warm == 2
+
+
+def test_lru_eviction_and_touch_order():
+    c = _cache(n_slots=2, t_bucket=1)
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=0, t=1, sig=sig, rid=1)  # slot 0
+    c.insert(f_sk, f_rf, lane=0, t=2, sig=sig, rid=2)  # slot 1
+    assert c.lookup(1, sig, rid=9) == 0  # touch slot 0 -> slot 1 is LRU
+    c.insert(f_sk, f_rf, lane=0, t=3, sig=sig, rid=3)  # evicts slot 1
+    assert c.evictions == 1
+    assert c.probe(2, sig, rid=9) is None  # rid 2's entry gone
+    assert c.probe(1, sig, rid=9) == 0  # rid 1's entry survived
+    assert c.probe(3, sig, rid=9) == 1
+
+
+def test_reserve_respects_batch_exclusions():
+    """Slots claimed earlier in the same micro-step batch must never be
+    re-picked (a batched scatter with duplicate indices has an unspecified
+    winner, and the host keys would describe the wrong lane's features)."""
+    c = _cache(n_slots=2, t_bucket=1)
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    taken: set[int] = set()
+    got = []
+    for rid in range(3):
+        slot = c.reserve(t=rid, sig=sig, rid=rid, exclude=taken)
+        got.append(slot)
+        if slot is not None:
+            taken.add(slot)
+    assert sorted(got[:2]) == [0, 1]  # distinct slots
+    assert got[2] is None  # ring exhausted for this batch
+
+
+def test_reset_cools_everything():
+    c = _cache()
+    f_sk, f_rf = _lane_feats()
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=1, t=100, sig=sig, rid=1)
+    c.lookup(100, sig, rid=2)
+    c.reset()
+    assert c.n_warm == 0 and c.probes == 0 and c.inserts == 0
+    assert float(jnp.abs(c.state.f_sk).max()) == 0.0
+
+
+def test_insert_copies_the_right_lane_pair():
+    c = _cache(n_slots=2)
+    n = 2
+    f_sk = jnp.arange(2 * n, dtype=jnp.float32)[:, None, None] * jnp.ones(
+        SM.feat_shape(TOY, E_SK, 1)[1:], jnp.float32
+    )
+    f_rf = jnp.arange(2 * n, dtype=jnp.float32)[:, None, None] * jnp.ones(
+        SM.feat_shape(TOY, E_RF, 1)[1:], jnp.float32
+    )
+    sig = np.ones((TOY.ctx_dim,), np.float32)
+    c.insert(f_sk, f_rf, lane=1, t=5, sig=sig, rid=0)
+    slot = np.asarray(c.state.f_sk[0])
+    assert (slot[0] == 1.0).all()  # cond row = lane 1
+    assert (slot[1] == 3.0).all()  # uncond row = lane n + 1
+
+
+def test_select_entry_features_passthrough_and_pick():
+    n = 2
+    own = jnp.arange(2 * n, dtype=jnp.float32)[:, None, None] * jnp.ones((1, 3, 5))
+    cached = 100.0 + jnp.arange(4, dtype=jnp.float32)[:, None, None, None] * jnp.ones(
+        (1, 2, 3, 5)
+    )
+    # all -1: exact passthrough (bitwise)
+    out = select_entry_features(own, cached, jnp.full((n,), -1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(own))
+    # lane 1 reads slot 2, lane 0 keeps its own rows
+    out = np.asarray(select_entry_features(own, cached, jnp.asarray([-1, 2], jnp.int32)))
+    assert (out[0] == 0.0).all() and (out[n] == 2.0).all()  # lane 0 own cond/unc
+    assert (out[1] == 102.0).all() and (out[n + 1] == 102.0).all()  # slot 2 pair
+
+
+# ---------------------------------------------------------------------------
+# Engine-level reuse
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def params():
+    return U.init_unet(jax.random.key(0), TOY)
+
+
+def _engine(params, n_lanes, mode, threshold, scheduler=None, t_bucket=125, slots=8):
+    cfg = EngineConfig(
+        n_lanes=n_lanes, max_steps=8, l_sketch=L_SK, l_refine=L_RF,
+        decode_images=False, cache_mode=mode, cache_slots=slots,
+        cache_threshold=threshold, cache_t_bucket=t_bucket,
+    )
+    return DiffusionEngine(TOY, DCFG, params, None, cfg, scheduler=scheduler)
+
+
+def test_cross_cache_serves_identical_twin_exactly(params):
+    """A request identical to an already-served one must hit on every FULL
+    step past the warmup guard, and — because the donor's captures are
+    exactly what its own FULL steps would have produced — land on (nearly)
+    the same latent as the cache-off engine."""
+    twin_ctx = np.random.default_rng(77).normal(
+        size=(TOY.ctx_len, TOY.ctx_dim)
+    ).astype(np.float32) * 0.2
+    reqs = lambda: [
+        _request(0, 6, _plan(6), noise_seed=0, ctx=twin_ctx),
+        _request(1, 6, _plan(6), noise_seed=0, ctx=twin_ctx),
+    ]
+    base = {d.rid: d.latent for d in _engine(params, 1, "off", 0.0).run(reqs())[0]}
+
+    eng = _engine(params, 1, "cross", 0.2)  # 1 lane: rid 1 runs after rid 0
+    done, summary = eng.run(reqs())
+    got = {d.rid: d.latent for d in done}
+
+    assert summary["demoted_full_steps"] > 0
+    assert summary["cache_hit_rate"] > 0
+    # rid 0 ran on a cold cache: identical to the cache-off engine
+    np.testing.assert_array_equal(got[0], base[0])
+    # rid 1's demoted FULL steps consumed its twin's exact captures
+    np.testing.assert_allclose(got[1], base[1], atol=1e-3)
+    assert np.isfinite(got[1]).all()
+
+
+def test_cross_cache_distant_prompts_never_hit(params):
+    """Independent random prompts sit ~sqrt(2) apart in relative distance —
+    far above threshold — so the cache must stay warm but unused and the
+    output bit-exact with cache off."""
+    mk = lambda: [_request(i, 6, _plan(6)) for i in range(3)]
+    base = {d.rid: d.latent for d in _engine(params, 2, "off", 0.0).run(mk())[0]}
+    eng = _engine(params, 2, "cross", 0.2)
+    done, summary = eng.run(mk())
+    assert summary["demoted_full_steps"] == 0
+    assert summary["cache_inserts"] > 0
+    for d in done:
+        np.testing.assert_array_equal(d.latent, base[d.rid])
+
+
+def test_intra_cache_skips_own_full_refreshes(params):
+    """Bucket width spanning the whole schedule makes a lane's later FULL
+    refreshes hit its own first capture — DeepCache-style self reuse."""
+    eng = _engine(params, 1, "intra", 0.2, t_bucket=1000)
+    done, summary = eng.run([_request(0, 6, _plan(6))])
+    assert summary["demoted_full_steps"] > 0
+    assert summary["full_steps"] + summary["demoted_full_steps"] == 3  # planned FULLs
+    assert np.isfinite(done[0].latent).all()
+
+
+def test_ring_smaller_than_full_batch_is_safe(params):
+    """Two lanes advancing FULL in the same micro-step with a 1-slot ring:
+    only one capture can be cached, and the output must stay bit-exact with
+    the cache-off engine (distant prompts — no demotions)."""
+    mk = lambda: [_request(i, 4, None) for i in range(2)]
+    base = {d.rid: d.latent for d in _engine(params, 2, "off", 0.0).run(mk())[0]}
+    eng = _engine(params, 2, "cross", 0.2, slots=1)
+    done, summary = eng.run(mk())
+    assert summary["cache_warm_slots"] == 1
+    assert summary["demoted_full_steps"] == 0
+    for d in done:
+        np.testing.assert_array_equal(d.latent, base[d.rid])
+
+
+def test_intra_opted_out_request_never_donates_slots(params):
+    """In intra mode an allow_cache=False request's captures are
+    unconsumable by anyone — they must not occupy (or evict) slots."""
+    req = _request(0, 6, _plan(6))
+    req.allow_cache = False
+    eng = _engine(params, 1, "intra", 0.2, t_bucket=1000)
+    _, summary = eng.run([req])
+    assert summary["cache_inserts"] == 0
+    assert summary["cache_warm_slots"] == 0
+    assert summary["demoted_full_steps"] == 0
+
+
+def test_allow_cache_false_opts_out(params):
+    twin_ctx = np.ones((TOY.ctx_len, TOY.ctx_dim), np.float32) * 0.1
+    r0 = _request(0, 6, _plan(6), noise_seed=0, ctx=twin_ctx)
+    r1 = _request(1, 6, _plan(6), noise_seed=0, ctx=twin_ctx)
+    r1.allow_cache = False
+    eng = _engine(params, 1, "cross", 0.2)
+    _, summary = eng.run([r0, r1])
+    assert summary["demoted_full_steps"] == 0
+    assert summary["cache_hit_rate"] == 0.0
+
+
+def test_cache_aware_scheduler_prefers_warm_request(params):
+    """With one lane busy and two queued requests, the one whose prompt
+    matches the warm cache should be admitted first despite arriving
+    later."""
+    warm_ctx = np.random.default_rng(5).normal(
+        size=(TOY.ctx_len, TOY.ctx_dim)
+    ).astype(np.float32) * 0.2
+    sched = CacheAwareScheduler(window=4)
+    eng = _engine(params, 1, "cross", 0.2, scheduler=sched)
+    reqs = [
+        _request(0, 6, _plan(6), noise_seed=0, ctx=warm_ctx),  # donor
+        _request(1, 6, _plan(6), noise_seed=1),  # cold prompt, arrives first
+        _request(2, 6, _plan(6), noise_seed=2, ctx=warm_ctx),  # warm prompt
+    ]
+    done, summary = eng.run(reqs)
+    order = [d.rid for d in done]
+    assert order[0] == 0
+    assert order[1] == 2, f"cache-aware admission should jump rid 2 ahead, got {order}"
+    assert summary["demoted_full_steps"] > 0
+
+
+def test_engine_summary_reports_cache_stats(params):
+    _, summary = _engine(params, 2, "cross", 0.1).run([_request(0, 4, None)])
+    for key in ("cache_mode", "cache_slots", "cache_warm_slots", "cache_inserts"):
+        assert key in summary
+    assert summary["cache_mode"] == "cross"
+
+
+def test_engine_config_rejects_bad_cache_mode():
+    with pytest.raises(ValueError):
+        EngineConfig(cache_mode="offf")

@@ -1,0 +1,107 @@
+"""Differential fuzz: StaticServer vs DiffusionEngine (cache off).
+
+Random seeded request mixes served by the lockstep baseline and by the
+continuous engine must land every request on the same latent.  Groups of
+``batch`` consecutive requests share one step count (and one plan choice)
+because lockstep overshoot is *semantic* for StaticServer: a short request
+batched with a longer one runs the longer schedule, so heterogeneous
+groups would legitimately differ.  Within homogeneous groups the two
+serving paths compute the same per-request trajectory.
+
+Equality is within a tight tolerance rather than bitwise: the two paths
+run different XLA programs (one ``lax.scan`` over the whole schedule vs
+per-step masked micro-steps), which fuse differently at the ~1e-5 level on
+the toy config.  Bit-level stability of each path individually is pinned
+by ``tests/test_golden_latents.py``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.types import DiffusionConfig, PASPlan
+from repro.configs import get_unet_config
+from repro.models import unet as U
+from repro.serving import DiffusionEngine, EngineConfig, GenRequest, StaticServer
+
+TOY = get_unet_config("sd_toy")
+N_UP = U.n_up_steps(TOY)
+L = TOY.latent_size**2
+L_SK, L_RF = min(3, N_UP), min(2, N_UP)
+ATOL = 5e-4
+
+
+def _plan_for(t: int) -> PASPlan | None:
+    """Deterministic plan choice shared by both serving paths: PAS on even
+    step counts, all-FULL on odd."""
+    if t % 2:
+        return None
+    return PASPlan(
+        t_sketch=max(2, t // 2 + 1), t_complete=2, t_sparse=2,
+        l_sketch=L_SK, l_refine=L_RF,
+    )
+
+
+def _mix(seed: int, n_groups: int, batch: int, t_lo: int, t_hi: int) -> list[GenRequest]:
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for g in range(n_groups):
+        t = int(rng.integers(t_lo, t_hi + 1))
+        for _ in range(batch):
+            rid = len(reqs)
+            reqs.append(
+                GenRequest(
+                    rid=rid,
+                    ctx=rng.normal(size=(TOY.ctx_len, TOY.ctx_dim)).astype(np.float32) * 0.2,
+                    noise=rng.normal(size=(L, TOY.in_channels)).astype(np.float32),
+                    timesteps=t,
+                    plan=_plan_for(t),
+                )
+            )
+    return reqs
+
+
+def _run_both(params, reqs, batch: int, max_steps: int):
+    dcfg = DiffusionConfig(timesteps_sample=max_steps)
+    static = StaticServer(
+        TOY, dcfg, params, None, batch, plan_fn=_plan_for, decode_images=False
+    )
+    s_done, _ = static.run(reqs)
+    cfg = EngineConfig(
+        n_lanes=batch, max_steps=max_steps, l_sketch=L_SK, l_refine=L_RF,
+        decode_images=False,
+    )
+    e_done, _ = DiffusionEngine(TOY, dcfg, params, None, cfg).run(reqs)
+    return (
+        {d.rid: d.latent for d in s_done},
+        {d.rid: d.latent for d in e_done},
+    )
+
+
+def _assert_equal(static_lat, engine_lat, reqs):
+    assert sorted(static_lat) == sorted(engine_lat) == [r.rid for r in reqs]
+    for rid in static_lat:
+        np.testing.assert_allclose(
+            engine_lat[rid], static_lat[rid], atol=ATOL,
+            err_msg=f"rid={rid} (t={reqs[rid].timesteps}, "
+            f"pas={reqs[rid].plan is not None}) diverged between serving paths",
+        )
+
+
+@pytest.fixture(scope="module")
+def params():
+    return U.init_unet(jax.random.key(1), TOY)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_differential_small_mix(params, seed):
+    reqs = _mix(seed, n_groups=2, batch=2, t_lo=3, t_hi=5)
+    _assert_equal(*_run_both(params, reqs, batch=2, max_steps=5), reqs)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [2, 3, 4])
+def test_differential_large_mix(params, seed):
+    reqs = _mix(seed, n_groups=4, batch=3, t_lo=3, t_hi=8)
+    _assert_equal(*_run_both(params, reqs, batch=3, max_steps=8), reqs)

@@ -1,0 +1,219 @@
+"""Property-based packing-policy invariants (pure host logic — no U-Net).
+
+A miniature of the engine's event loop (`_Sim`) drives the real schedulers
+over randomized arrival traces and branch plans, asserting the three
+liveness/safety invariants the serving layer promises:
+
+* **bounded starvation** — no active lane sits unadvanced longer than
+  ``patience + n_lanes`` micro-steps (one aging override can only serve one
+  class per step, so simultaneous stalls queue behind each other);
+* **admission safety** — a request is admitted at most once, only ever into
+  a free lane, and only after it was submitted;
+* **eventual retirement** — every submitted request retires within the
+  trivial work bound (total plan steps x (patience + 1) + admissions).
+
+Random traces come in two flavours: seeded numpy cases that always run
+(keeping the invariants in the tier-1 gate even without hypothesis), and
+``@given`` fuzzing with the pinned hypothesis from requirements-dev.txt
+(degrading to skips via the fallback shim on bare containers).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI installs hypothesis; bare runs degrade to skips
+    from _hypothesis_fallback import given, settings, st
+
+from repro.serving.scheduler import CacheAwareScheduler, FIFOScheduler, PlanAwareScheduler
+
+
+class _FakeReq:
+    def __init__(self, rid, branches):
+        self.rid = rid
+        self.branches = np.asarray(branches, np.int32)
+
+    def branch_vector(self):
+        return self.branches
+
+
+def _make_scheduler(kind: str, window: int):
+    if kind == "fifo":
+        return FIFOScheduler()
+    if kind == "plan":
+        return PlanAwareScheduler(window=window)
+    return CacheAwareScheduler(window=window)  # no cache attached -> plan-aware
+
+
+class _Sim:
+    """Host-only mirror of ``DiffusionEngine.step``'s control flow."""
+
+    def __init__(self, scheduler, n_lanes: int, plans: list[np.ndarray]):
+        self.s = scheduler
+        self.n_lanes = n_lanes
+        self.reqs = [_FakeReq(i, p) for i, p in enumerate(plans)]
+        self.lane_req = [None] * n_lanes
+        self.lane_step = [0] * n_lanes
+        self.stall = np.zeros(n_lanes, np.int64)
+        self.retired: list[int] = []
+        self.admitted: list[int] = []
+        self.micro_steps = 0
+        self.max_stall_seen = 0
+
+    def _remaining(self):
+        return [
+            r.branches[self.lane_step[i]:]
+            for i, r in enumerate(self.lane_req)
+            if r is not None
+        ]
+
+    def _backfill(self):
+        for lane in range(self.n_lanes):
+            if self.lane_req[lane] is not None:
+                continue
+            req = self.s.next_request(self._remaining())
+            if req is None:
+                return
+            # admission safety: never admit twice, never into a busy lane
+            assert req.rid not in self.admitted, f"rid {req.rid} admitted twice"
+            self.admitted.append(req.rid)
+            self.lane_req[lane] = req
+            self.lane_step[lane] = 0
+            self.stall[lane] = 0
+
+    def run(self):
+        for r in self.reqs:
+            self.s.add(r)
+        total_steps = sum(len(r.branches) for r in self.reqs)
+        bound = total_steps * (self.s.patience + 1) + len(self.reqs) + 1
+        while len(self.retired) < len(self.reqs):
+            self.micro_steps += 1
+            assert self.micro_steps <= bound, (
+                f"no progress: {len(self.retired)}/{len(self.reqs)} retired "
+                f"after {self.micro_steps} micro-steps"
+            )
+            self._backfill()
+            active = [i for i in range(self.n_lanes) if self.lane_req[i] is not None]
+            assert active, "deadlock: pending requests but no active lanes"
+            classes = np.array(
+                [self.lane_req[i].branches[self.lane_step[i]] for i in active], np.int64
+            )
+            b = self.s.pick_branch(classes, self.stall[active])
+            advanced = [i for k, i in enumerate(active) if classes[k] == b]
+            assert advanced, "branch pick advanced no lane"
+            self.stall[active] += 1
+            for lane in advanced:
+                self.stall[lane] = 0
+                self.lane_step[lane] += 1
+                req = self.lane_req[lane]
+                if self.lane_step[lane] >= len(req.branches):
+                    self.retired.append(req.rid)
+                    self.lane_req[lane] = None
+            self.max_stall_seen = max(self.max_stall_seen, int(self.stall.max()))
+            # bounded starvation: aging can only clear one class per step,
+            # so simultaneous stalls queue at most n_lanes deep
+            assert self.max_stall_seen <= self.s.patience + self.n_lanes, (
+                f"lane starved {self.max_stall_seen} micro-steps "
+                f"(patience={self.s.patience}, lanes={self.n_lanes})"
+            )
+        return self
+
+
+def _check_trace(kind, window, n_lanes, plans):
+    plans = [np.asarray(p, np.int32) for p in plans if len(p)]
+    if not plans:
+        return
+    sim = _Sim(_make_scheduler(kind, window), n_lanes, plans).run()
+    assert sorted(sim.retired) == list(range(len(plans))), "a request never retired"
+    assert sorted(sim.admitted) == list(range(len(plans)))
+
+
+SCHEDULERS = ("fifo", "plan", "cache")
+
+
+# ---------------------------------------------------------------------------
+# Seeded numpy traces — always run (tier-1, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", SCHEDULERS)
+@pytest.mark.parametrize("seed", range(8))
+def test_random_trace_invariants(kind, seed):
+    rng = np.random.default_rng(1000 * seed + 7)
+    n_lanes = int(rng.integers(1, 5))
+    n_reqs = int(rng.integers(1, 13))
+    plans = [
+        rng.integers(0, 3, size=int(rng.integers(1, 7))).astype(np.int32)
+        for _ in range(n_reqs)
+    ]
+    _check_trace(kind, int(rng.integers(1, 6)), n_lanes, plans)
+
+
+def test_fifo_preserves_arrival_order_single_lane():
+    sim = _Sim(FIFOScheduler(), 1, [np.zeros(2, np.int32) for _ in range(6)]).run()
+    assert sim.retired == list(range(6))
+
+
+def test_adversarial_minority_class_never_starves():
+    """One REFINE-only plan against a wall of FULL-only plans: aging must
+    pull it through on every scheduler."""
+    plans = [np.full(6, 2, np.int32)] + [np.zeros(6, np.int32) for _ in range(7)]
+    for kind in SCHEDULERS:
+        _check_trace(kind, 4, 2, plans)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzzing — runs under the pinned CI environment
+# ---------------------------------------------------------------------------
+
+
+@given(
+    kind=st.sampled_from(SCHEDULERS),
+    window=st.integers(1, 6),
+    n_lanes=st.integers(1, 4),
+    plans=st.lists(
+        st.lists(st.integers(0, 2), min_size=1, max_size=8), min_size=0, max_size=14
+    ),
+)
+@settings(max_examples=120, deadline=None)
+def test_fuzz_trace_invariants(kind, window, n_lanes, plans):
+    _check_trace(kind, window, n_lanes, plans)
+
+
+@given(
+    classes=st.lists(st.integers(0, 2), min_size=1, max_size=8),
+    stalls=st.lists(st.integers(0, 30), min_size=1, max_size=8),
+)
+@settings(max_examples=120, deadline=None)
+def test_fuzz_pick_branch_always_serves_an_active_lane(classes, stalls):
+    n = min(len(classes), len(stalls))
+    classes = np.asarray(classes[:n], np.int64)
+    stalls = np.asarray(stalls[:n], np.int64)
+    s = FIFOScheduler()
+    b = s.pick_branch(classes, stalls)
+    assert b in classes, "picked a branch class no active lane is in"
+    if stalls.max() >= s.patience:
+        assert b == classes[int(np.argmax(stalls))], "aging override ignored"
+
+
+@given(
+    window=st.integers(2, 5),
+    aligned=st.lists(st.integers(0, 2), min_size=2, max_size=6),
+    n_competitors=st.integers(1, 10),
+)
+@settings(max_examples=60, deadline=None)
+def test_fuzz_plan_aware_head_admission_is_bounded(window, aligned, n_competitors):
+    """However many better-aligned competitors stream past, the queue head
+    is admitted after at most max_head_skips bypasses."""
+    s = PlanAwareScheduler(window=window)
+    flight = [np.asarray(aligned, np.int32)]
+    head_plan = (np.asarray(aligned, np.int32) + 1) % 3  # maximally misaligned
+    s.add(_FakeReq(0, head_plan))
+    admitted = []
+    for i in range(1, n_competitors + s.max_head_skips + 2):
+        s.add(_FakeReq(i, aligned))
+        admitted.append(s.next_request(flight).rid)
+        if 0 in admitted:
+            break
+    assert 0 in admitted
+    assert admitted.index(0) <= s.max_head_skips

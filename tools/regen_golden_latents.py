@@ -1,0 +1,112 @@
+"""Regenerate or verify the golden-latent fixtures under tests/golden/.
+
+Bit-exactness is only meaningful under a fixed XLA configuration, and
+``XLA_FLAGS`` is process-global state that other code mutates (e.g.
+``repro.launch.dryrun`` forces 512 host devices when merely *imported*,
+which pytest does at collection time).  This script therefore pins the
+canonical golden environment below *before* jax loads, and the tier-1 test
+(``tests/test_golden_latents.py``) runs the bitwise check through this
+script in a subprocess so the comparison is immune to whatever flags the
+host process accumulated.
+
+Regenerate after any *intentional* numerics change to the sampler, lanes,
+engine, or cache (and say so in the PR — a golden refresh is a quality
+event, not a formality):
+
+    PYTHONPATH=src python tools/regen_golden_latents.py
+
+Verify (exit 0 iff every execution family is bit-exact):
+
+    PYTHONPATH=src python tools/regen_golden_latents.py --check
+
+Bit-exactness additionally assumes the same CPU code generation as the
+machine that wrote the fixture; LLVM specializes to the host ISA, so a CI
+fleet spanning CPU generations can drift at the ulp level with no code
+change.  If that ever bites, set ``GOLDEN_ATOL`` (e.g. ``1e-5``) in the CI
+step to check within a tolerance instead — and regenerate the fixture to
+re-tighten locally.
+
+The workload definition lives in ``repro.serving.golden`` so this script
+and the test can never disagree about what the goldens mean.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# canonical golden environment — must be set before jax initializes
+os.environ["XLA_FLAGS"] = "--xla_cpu_multi_thread_eigen=false"
+os.environ.pop("XLA_FLAGS_EXTRA", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.serving import golden as G  # noqa: E402
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+
+def _compute():
+    params = G.golden_params()
+    return {
+        "pas_denoise": G.run_straight_line(params),
+        "engine[cache=off]": G.run_engine(params, cache_mode="off"),
+        "engine[cache=cross,threshold=0]": G.run_engine(
+            params, cache_mode="cross", cache_threshold=0.0
+        ),
+    }
+
+
+def check(path: str) -> int:
+    line_g, engine_g = G.load_golden(path)
+    want = {
+        "pas_denoise": line_g,
+        "engine[cache=off]": engine_g,
+        "engine[cache=cross,threshold=0]": engine_g,  # threshold 0 never hits
+    }
+    atol = float(os.environ.get("GOLDEN_ATOL", "0"))  # hardware-drift escape hatch
+    got = _compute()
+    failures = 0
+    for label, latents in got.items():
+        for rid in sorted(want[label]):
+            drift = float(np.abs(latents[rid] - want[label][rid]).max())
+            ok = np.array_equal(latents[rid], want[label][rid]) or drift <= atol
+            status = (
+                "bit-exact" if drift == 0 and ok
+                else f"within atol={atol:g} max|diff|={drift:.2e}" if ok
+                else f"DRIFTED max|diff|={drift:.2e}"
+            )
+            print(f"[golden] {label} rid={rid}: {status}")
+            failures += not ok
+    return 1 if failures else 0
+
+
+def write(path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    line, engine = G.save_golden(path)
+    print(f"[golden] wrote {os.path.relpath(path)}")
+    for rid in sorted(line):
+        drift = float(np.abs(line[rid] - engine[rid]).max())
+        print(
+            f"[golden]   rid={rid} shape={line[rid].shape} "
+            f"line-vs-engine max|diff|={drift:.2e}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--check", action="store_true",
+        help="verify the existing goldens bit-exactly instead of rewriting them",
+    )
+    args = ap.parse_args()
+    path = os.path.join(GOLDEN_DIR, G.GOLDEN_FILE)
+    if args.check:
+        sys.exit(check(path))
+    write(path)
+
+
+if __name__ == "__main__":
+    main()

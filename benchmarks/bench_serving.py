@@ -18,15 +18,31 @@ base prompts with per-request jitter — the workload shape where requests
 actually share features) and reports the cache hit rate, the FULL U-Net
 step reduction vs the cache-off continuous baseline, and the throughputs.
 
+``--shards N`` additionally runs the mesh-sharded engine on the same
+stream at the same *total* lane count (the ``--lanes`` budget split over N
+device shards, one jitted GSPMD micro-step, per-shard branch votes) and
+reports the sharded/single-device throughput speedup, per-shard lane
+occupancy balance and — with ``--cache`` — per-shard hit rates.  Needs N
+visible devices: on CPU run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--json PATH`` writes the machine-readable benchmark trajectory
+(`BENCH_serving.json`): headline throughput/latency numbers plus the
+machine-portable ratio gates the CI benchmark job compares against the
+checked-in baseline (see ``tools/compare_bench.py``).
+
 Usage:
   PYTHONPATH=src:. python benchmarks/bench_serving.py            # full sweep
   PYTHONPATH=src:. python benchmarks/bench_serving.py --smoke    # CI-sized
   PYTHONPATH=src:. python benchmarks/bench_serving.py --pas      # + PAS plans
   PYTHONPATH=src:. python benchmarks/bench_serving.py --cache cross  # + cache
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src:. python benchmarks/bench_serving.py --shards 4 --lanes 8
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -41,6 +57,7 @@ from repro.serving import (
     EngineConfig,
     GenRequest,
     PlanAwareScheduler,
+    ShardedDiffusionEngine,
     StaticServer,
 )
 
@@ -125,6 +142,9 @@ def bench_rate(engine, static, ucfg, args, rate, pas) -> dict:
         "pas": pas,
         "speedup": speedup,
         "idle_lane_frac": s_static["idle_lane_frac"],
+        "continuous_throughput_req_s": s_cont["throughput_req_s"],
+        "continuous_p50_latency_s": s_cont["p50_latency_s"],
+        "continuous_p99_latency_s": s_cont["p99_latency_s"],
     }
 
 
@@ -155,6 +175,59 @@ def bench_cache(engine_off, engine_on, ucfg, args, rate) -> dict:
     }
 
 
+def bench_sharded(engine_1, engine_n, engine_n_cache, ucfg, args, rate) -> dict:
+    """Single-device vs mesh-sharded continuous serving, same total lanes,
+    same mixed-plan stream.
+
+    The headline speedup compares cache-off against cache-off (pure
+    sharding win: per-shard branch votes + device parallelism).  When the
+    cache-armed sharded engine is supplied, the same stream also measures
+    shard-local reuse: per-shard hit rates and the FULL-step reduction vs
+    the cache-off sharded run.
+    """
+    reqs = make_stream(
+        ucfg, args.requests, rate, args.t_lo, args.t_hi, False, args.seed,
+        mixed=True, prompt_pool=args.prompt_pool, prompt_jitter=args.prompt_jitter,
+    )
+    tag = f"shards={args.shards}/rate={rate:g}"
+    _, s_1 = engine_1.run(reqs, realtime=True)
+    _, s_n = engine_n.run(reqs, realtime=True)
+    speedup = s_n["throughput_req_s"] / max(s_1["throughput_req_s"], 1e-9)
+    for mode, s in (("single", s_1), ("sharded", s_n)):
+        emit("serving", f"{tag}/{mode}/throughput_req_s", s["throughput_req_s"], "req/s")
+        emit("serving", f"{tag}/{mode}/p50_latency_s", s["p50_latency_s"], "s")
+        emit("serving", f"{tag}/{mode}/p99_latency_s", s["p99_latency_s"], "s")
+        emit("serving", f"{tag}/{mode}/mean_advance_eff", s["mean_advance_eff"], "")
+    emit(
+        "serving", f"{tag}/sharded/occupancy_balance",
+        s_n.get("shard_occupancy_balance", 0.0), "", "min/max shard occupancy",
+    )
+    emit("serving", f"{tag}/speedup", round(speedup, 3), "x", "sharded vs single device")
+    row = {
+        "rate": rate,
+        "speedup": speedup,
+        "single_throughput_req_s": s_1["throughput_req_s"],
+        "sharded_throughput_req_s": s_n["throughput_req_s"],
+        "sharded_p50_latency_s": s_n["p50_latency_s"],
+        "sharded_p99_latency_s": s_n["p99_latency_s"],
+        "shard_occupancy_balance": s_n.get("shard_occupancy_balance", 0.0),
+        "shard_mean_active": s_n.get("shard_mean_active", []),
+    }
+    if engine_n_cache is not None:
+        _, s_c = engine_n_cache.run(reqs, realtime=True)
+        full_red = 1.0 - s_c["full_steps"] / max(s_n["full_steps"], 1)
+        row["shard_hit_rates"] = s_c.get("shard_hit_rates", [])
+        row["cache_hit_rate"] = s_c["cache_hit_rate"]
+        row["cache_full_step_reduction"] = full_red
+        emit("serving", f"{tag}/sharded-cache/hit_rate", s_c["cache_hit_rate"], "")
+        emit(
+            "serving", f"{tag}/sharded-cache/shard_hit_rates",
+            s_c.get("shard_hit_rates", []), "",
+        )
+        emit("serving", f"{tag}/sharded-cache/full_step_reduction", round(full_red, 3), "")
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=42)
@@ -178,12 +251,26 @@ def main() -> None:
         help="number of shared base prompts in the cache workload",
     )
     ap.add_argument("--prompt-jitter", type=float, default=0.02)
+    ap.add_argument(
+        "--shards", type=int, default=1,
+        help="also bench the mesh-sharded engine: --lanes total lanes split "
+        "over this many device shards (needs that many visible devices; on "
+        "CPU set XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+    )
+    ap.add_argument(
+        "--json", type=str, default=None, metavar="PATH",
+        help="write the benchmark-trajectory JSON (BENCH_serving.json)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
     args = ap.parse_args()
 
     if args.smoke:
         args.requests, args.lanes, args.t_lo, args.t_hi = 6, 2, 3, 5
+        if args.shards > 1:
+            args.lanes = max(args.lanes, args.shards)
+    if args.shards > 1 and args.lanes % args.shards:
+        raise SystemExit(f"--lanes {args.lanes} must divide over --shards {args.shards}")
 
     ucfg = get_unet_config("sd_toy")
     n_up = U.n_up_steps(ucfg)
@@ -238,6 +325,9 @@ def main() -> None:
             f"idle={best['idle_lane_frac']}",
         )
 
+    cache_results: list[dict] = []
+    sharded_results: list[dict] = []
+    sharded_capacity: dict = {}
     if args.cache != "off":
         engine_off = engine  # the already-warmed cache-off continuous engine
         cache_cfg = EngineConfig(
@@ -279,6 +369,158 @@ def main() -> None:
             "",
             f"target>=0.10 mode={args.cache} threshold={args.cache_threshold}",
         )
+
+    if args.shards > 1:
+        def sharded_cfg(cache: bool) -> EngineConfig:
+            return EngineConfig(
+                n_lanes=args.lanes,
+                max_steps=args.t_hi,
+                l_sketch=min(3, n_up),
+                l_refine=min(2, n_up),
+                decode_images=False,
+                n_shards=args.shards,
+                cache_mode=args.cache if cache else "off",
+                cache_slots=args.cache_slots,
+                cache_threshold=args.cache_threshold,
+                cache_t_bucket=args.cache_bucket,
+            )
+
+        engine_sh = ShardedDiffusionEngine(
+            ucfg, dcfg, params, None, sharded_cfg(False),
+            scheduler=PlanAwareScheduler(window=4),
+        )
+        engine_sh_cache = None
+        if args.cache != "off":
+            engine_sh_cache = ShardedDiffusionEngine(
+                ucfg, dcfg, params, None, sharded_cfg(True),
+                scheduler=CacheAwareScheduler(window=4),
+            )
+        warm = make_stream(
+            ucfg, 2 * args.lanes, 1e9, args.t_lo, args.t_hi, False, 7,
+            mixed=True, prompt_pool=args.prompt_pool, prompt_jitter=args.prompt_jitter,
+        )
+        engine_sh.run(warm)  # compile the GSPMD micro-step + sharded admit
+        if engine_sh_cache is not None:
+            engine_sh_cache.run(warm)
+        # saturation rates: device parallelism only shows once the single-
+        # device engine is the bottleneck
+        sharded_rates = args.rates if args.rates is not None else sorted(
+            {r["rate"] for r in results}
+        )[-2:]
+        sharded_results = [
+            bench_sharded(engine, engine_sh, engine_sh_cache, ucfg, args, rate)
+            for rate in sharded_rates
+        ]
+        # closed-loop capacity: everything queued up front, wall = pure
+        # serving time — the arrival-floor-free measure of what the shards
+        # actually buy (open-loop speedups above saturate toward this)
+        cap_reqs = make_stream(
+            ucfg, args.requests, max(sharded_rates), args.t_lo, args.t_hi, False,
+            args.seed, mixed=True, prompt_pool=args.prompt_pool,
+            prompt_jitter=args.prompt_jitter,
+        )
+        _, c_1 = engine.run(cap_reqs, realtime=False)
+        _, c_n = engine_sh.run(cap_reqs, realtime=False)
+        cap_speedup = c_n["throughput_req_s"] / max(c_1["throughput_req_s"], 1e-9)
+        sharded_capacity = {
+            "single_capacity_req_s": c_1["throughput_req_s"],
+            "sharded_capacity_req_s": c_n["throughput_req_s"],
+            "capacity_speedup": cap_speedup,
+            "single_advance_eff": c_1["mean_advance_eff"],
+            "sharded_advance_eff": c_n["mean_advance_eff"],
+            "shard_occupancy_balance": c_n.get("shard_occupancy_balance", 0.0),
+            "shard_mean_active": c_n.get("shard_mean_active", []),
+        }
+        emit(
+            "serving", f"shards={args.shards}/capacity/single_req_s",
+            c_1["throughput_req_s"], "req/s", "closed loop",
+        )
+        emit(
+            "serving", f"shards={args.shards}/capacity/sharded_req_s",
+            c_n["throughput_req_s"], "req/s", "closed loop",
+        )
+        emit(
+            "serving", f"acceptance/sharded_capacity_speedup_shards={args.shards}",
+            round(cap_speedup, 3), "x",
+            f"target>2x lanes={args.lanes} (scales with cores, >= {args.shards} ideal)",
+        )
+        emit(
+            "serving", "acceptance/shard_occupancy_balance",
+            round(sharded_capacity["shard_occupancy_balance"], 3), "",
+            "1.0 = perfectly balanced",
+        )
+
+    if args.json:
+        _write_trajectory(args, results, cache_results, sharded_results, sharded_capacity)
+
+
+def _write_trajectory(
+    args,
+    results: list[dict],
+    cache_results: list[dict],
+    sharded_results: list[dict],
+    sharded_capacity: dict,
+) -> None:
+    """Serialize the run into the benchmark-trajectory JSON.
+
+    ``gates`` holds the metrics the CI benchmark job compares against the
+    checked-in baseline (``tools/compare_bench.py``).  Gated metrics are
+    *ratios* (speedups, reductions, balance) rather than absolute req/s so
+    the gate is portable across machines of different speeds; absolute
+    numbers ride along under ``headline`` for trend inspection.
+    """
+    out: dict = {
+        "bench": "serving",
+        "config": {
+            "requests": args.requests,
+            "lanes": args.lanes,
+            "shards": args.shards,
+            "t_lo": args.t_lo,
+            "t_hi": args.t_hi,
+            "cache": args.cache,
+            "cache_threshold": args.cache_threshold,
+            "prompt_pool": args.prompt_pool,
+            "seed": args.seed,
+        },
+        "rates": results,
+        "cache": cache_results,
+        "sharded": sharded_results,
+        "sharded_capacity": sharded_capacity,
+        "gates": {},
+        "headline": {},
+    }
+    gates = out["gates"]
+    headline = out["headline"]
+    if results:
+        best = max(results, key=lambda r: r["speedup"])
+        gates["continuous_vs_static_speedup"] = round(best["speedup"], 3)
+    if cache_results:
+        best = max(cache_results, key=lambda r: r["full_step_reduction"])
+        gates["cache_full_step_reduction"] = round(best["full_step_reduction"], 3)
+        headline["cache_hit_rate"] = round(best["hit_rate"], 3)
+    if sharded_results:
+        best = max(sharded_results, key=lambda r: r["speedup"])
+        gates["sharded_vs_single_speedup"] = round(best["speedup"], 3)
+        headline["sharded_throughput_req_s"] = best["sharded_throughput_req_s"]
+        headline["sharded_p50_latency_s"] = best["sharded_p50_latency_s"]
+        headline["sharded_p99_latency_s"] = best["sharded_p99_latency_s"]
+        if "shard_hit_rates" in best:
+            headline["shard_hit_rates"] = best["shard_hit_rates"]
+    if sharded_capacity:
+        gates["sharded_capacity_speedup"] = round(sharded_capacity["capacity_speedup"], 3)
+        gates["shard_occupancy_balance"] = round(
+            sharded_capacity["shard_occupancy_balance"], 3
+        )
+        headline["sharded_capacity_req_s"] = sharded_capacity["sharded_capacity_req_s"]
+        headline["single_capacity_req_s"] = sharded_capacity["single_capacity_req_s"]
+    if results:
+        fastest = max(results, key=lambda r: r["continuous_throughput_req_s"])
+        headline["continuous_throughput_req_s"] = fastest["continuous_throughput_req_s"]
+        headline["continuous_p50_latency_s"] = fastest["continuous_p50_latency_s"]
+        headline["continuous_p99_latency_s"] = fastest["continuous_p99_latency_s"]
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    emit("serving", "trajectory_json", args.json, "", "written")
 
 
 if __name__ == "__main__":

@@ -17,12 +17,43 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:
     """Axes over which the global batch is sharded."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def lane_mesh(n_shards: int) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``n_shards`` local devices.
+
+    The serving engine shards its lane axis over this mesh (each device
+    owns a contiguous lane shard).  On CPU-only hosts multi-device meshes
+    need forced host devices, e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set *before*
+    jax initializes.
+    """
+    devs = jax.devices()
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    if n_shards > len(devs):
+        raise ValueError(
+            f"lane mesh wants {n_shards} devices but only {len(devs)} are "
+            "visible; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n_shards} (or more) before importing jax"
+        )
+    return Mesh(np.asarray(devs[:n_shards]), ("data",))
+
+
+def lane_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis (lane/slot) sharding over the lane mesh's data axis."""
+    return NamedSharding(mesh, P("data"))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
 
 
 def dp_size(mesh: Mesh) -> int:

@@ -17,10 +17,19 @@ captures (DeepCache-style), ``cross`` lets requests with nearby prompts and
 timesteps reuse each other's, with ``--cache-threshold`` as the
 quality/reuse knob (0 = bit-exact with ``off``).
 
+``--shards N`` shards the continuous engine's lane axis over N devices
+(``repro.serving.ShardedDiffusionEngine``): each device owns ``batch / N``
+lanes, branch classes are chosen per shard, and the feature cache splits
+into shard-local rings.  ``--shards 1`` is exactly the single-device
+engine.  On CPU-only hosts expose devices first, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --requests 8
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --engine static
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --cache cross
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --mode diffusion --batch 8 --shards 4
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma3-1b --requests 4
 """
 from __future__ import annotations
@@ -41,10 +50,10 @@ from repro.models import unet as U
 from repro.models import vae as V
 from repro.serving import (
     CacheAwareScheduler,
-    DiffusionEngine,
     EngineConfig,
     GenRequest,
     PlanAwareScheduler,
+    make_serving_engine,
     serve_static,
 )
 
@@ -125,11 +134,17 @@ def serve_diffusion(args) -> dict:
     reqs = make_diffusion_requests(args, ucfg)
     engine_kind = getattr(args, "engine", "continuous")
 
+    n_shards = getattr(args, "shards", 1)
     if engine_kind == "static":
         if getattr(args, "cache", "off") != "off":
             raise SystemExit(
                 "--cache requires the continuous engine (lockstep batches have "
                 "no per-lane micro-steps to demote); drop --engine static or --cache"
+            )
+        if n_shards > 1:
+            raise SystemExit(
+                "--shards requires the continuous engine (lockstep batches have "
+                "no lane axis to shard); drop --engine static or --shards"
             )
         plan_fn = (lambda t: default_pas_plan(t, n_up)) if args.pas else (lambda t: None)
         done, summary = serve_static(
@@ -146,6 +161,7 @@ def serve_diffusion(args) -> dict:
             cache_slots=getattr(args, "cache_slots", 16),
             cache_threshold=getattr(args, "cache_threshold", 0.15),
             cache_t_bucket=getattr(args, "cache_bucket", 125),
+            n_shards=n_shards,
         )
         window = getattr(args, "window", 4)
         scheduler = (
@@ -153,7 +169,7 @@ def serve_diffusion(args) -> dict:
             if cache_mode != "off"
             else PlanAwareScheduler(window=window)
         )
-        engine = DiffusionEngine(ucfg, dcfg, params, vae_params, cfg, scheduler=scheduler)
+        engine = make_serving_engine(ucfg, dcfg, params, vae_params, cfg, scheduler=scheduler)
         done, summary = engine.run(reqs)
 
     assert sorted(r.rid for r in done) == list(range(args.requests))
@@ -249,6 +265,12 @@ def main() -> None:
         help="step-level continuous batching vs fixed-size lockstep batches",
     )
     ap.add_argument("--window", type=int, default=4, help="plan-aware admission window")
+    ap.add_argument(
+        "--shards", type=int, default=1,
+        help="lane shards over a device mesh (continuous engine only; needs "
+        ">= N visible devices — on CPU set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
     ap.add_argument(
         "--cache",
         choices=["off", "intra", "cross"],

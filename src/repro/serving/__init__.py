@@ -1,14 +1,21 @@
 """Step-level continuous-batching serving for the PAS diffusion sampler.
 
-* ``lanes``     — per-lane sampler state (``LaneState``) + jitted micro-step
-* ``cache``     — cross-request feature cache (device slots + host LRU keys)
-* ``scheduler`` — admission queue packing policies (FIFO, plan-/cache-aware)
-* ``engine``    — the continuous-batching event loop + static baseline
-* ``metrics``   — latency percentiles, throughput, lane occupancy, hit rate
+* ``lanes``     — per-lane sampler state (``LaneState`` / mesh-sharded
+  ``ShardedLaneState``) + jitted micro-steps (single-device and GSPMD)
+* ``cache``     — cross-request feature cache (device slots + host LRU keys;
+  single ring or shard-local rings)
+* ``scheduler`` — admission queue packing policies (FIFO, plan-/cache-aware,
+  warm-shard routing)
+* ``engine``    — the continuous-batching event loop (single-device +
+  mesh-sharded) + static baseline
+* ``metrics``   — latency percentiles, throughput, lane occupancy/balance,
+  hit rate
 """
 from repro.serving.cache import (
     CacheState,
     FeatureCache,
+    ShardedFeatureCache,
+    SlotRing,
     prompt_signature,
     signature_distance,
 )
@@ -17,10 +24,12 @@ from repro.serving.engine import (
     DiffusionEngine,
     EngineConfig,
     GenRequest,
+    ShardedDiffusionEngine,
     StaticServer,
+    make_serving_engine,
     serve_static,
 )
-from repro.serving.lanes import LaneState, make_plan_arrays
+from repro.serving.lanes import LaneState, ShardedLaneState, make_plan_arrays
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import (
     CacheAwareScheduler,
@@ -40,8 +49,13 @@ __all__ = [
     "LaneState",
     "PlanAwareScheduler",
     "ServingMetrics",
+    "ShardedDiffusionEngine",
+    "ShardedFeatureCache",
+    "ShardedLaneState",
+    "SlotRing",
     "StaticServer",
     "make_plan_arrays",
+    "make_serving_engine",
     "prompt_signature",
     "serve_static",
     "signature_distance",

@@ -109,27 +109,25 @@ def select_entry_features(
     return jnp.concatenate([cond, unc], axis=0)
 
 
-class FeatureCache:
-    """Fixed-size LRU feature cache: device slots + host keys.
+class SlotRing:
+    """Host-side slot metadata + hit/eviction policy for one feature ring.
 
-    One instance is owned by a :class:`~repro.serving.engine.DiffusionEngine`;
-    the engine probes before each micro-step (host metadata only), passes the
-    winning slot per lane into the jitted micro-step as ``feat_source``, and
-    inserts fresh FULL-step captures afterwards.  All methods are host-cheap:
-    O(S) numpy over the slot metadata.
+    Holds everything *except* the device feature tensors: per-slot keys
+    (timestep bucket + prompt signature), validity, owner rid, the LRU
+    clock, and hit/miss counters.  :class:`FeatureCache` pairs one ring
+    with one device :class:`CacheState`; :class:`ShardedFeatureCache`
+    pairs one ring *per shard* with a single mesh-sharded state.  All
+    methods are host-cheap: O(S) numpy over the slot metadata.
     """
 
     def __init__(
         self,
-        ucfg: UNetConfig,
-        e_sk: int,
-        e_rf: int,
+        n_slots: int,
+        sig_dim: int,
         *,
-        n_slots: int = 16,
         threshold: float = 0.15,
         t_bucket: int = 125,
         mode: str = "cross",
-        dtype=jnp.float32,
     ):
         if mode not in ("intra", "cross"):
             raise ValueError(f"cache mode must be 'intra' or 'cross', got {mode!r}")
@@ -143,21 +141,12 @@ class FeatureCache:
         self.n_slots = n_slots
         self.threshold = threshold
         self.t_bucket = t_bucket
-        self._sk_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_sk, 1)[1:]
-        self._rf_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_rf, 1)[1:]
-        self._dtype = dtype
-        self.sig_dim = ucfg.ctx_dim
-        self.reset()
+        self.sig_dim = sig_dim
+        self.reset_meta()
 
-    # -- lifecycle -----------------------------------------------------------
-
-    def reset(self) -> None:
-        """Drop all slots and counters (cold cache)."""
+    def reset_meta(self) -> None:
+        """Drop all slot keys and counters (cold ring)."""
         s = self.n_slots
-        self.state = CacheState(
-            f_sk=jnp.zeros(self._sk_shape, self._dtype),
-            f_rf=jnp.zeros(self._rf_shape, self._dtype),
-        )
         self.bucket = np.full((s,), -1, np.int64)
         self.sig = np.zeros((s, self.sig_dim), np.float32)
         self.rid = np.full((s,), -1, np.int64)
@@ -230,8 +219,11 @@ class FeatureCache:
         """A probed FULL step executed as FULL (no warm slot matched)."""
         self.probes += 1
 
-    def plan_warmth(self, req) -> float:
+    def plan_warmth(self, req, shard: int | None = None) -> float:
         """Fraction of a queued request's FULL steps that would hit now.
+
+        ``shard`` is accepted (and ignored) so single-ring and sharded
+        caches expose one signature to the cache-aware scheduler.
 
         Duck-typed on the engine's ``GenRequest`` (needs ``_lane_plan`` and
         ``_sig``); anything else scores 0 — schedulers stay usable with
@@ -295,6 +287,61 @@ class FeatureCache:
         self._touch(slot)
         return slot
 
+    # -- reporting -----------------------------------------------------------
+
+    def counters(self) -> dict:
+        return {
+            "cache_probes": self.probes,
+            "cache_probe_hits": self.probe_hits,
+            "cache_inserts": self.inserts,
+            "cache_evictions": self.evictions,
+        }
+
+
+class FeatureCache(SlotRing):
+    """Fixed-size LRU feature cache: device slots + host keys.
+
+    One instance is owned by a :class:`~repro.serving.engine.DiffusionEngine`;
+    the engine probes before each micro-step (host metadata only), passes the
+    winning slot per lane into the jitted micro-step as ``feat_source``, and
+    inserts fresh FULL-step captures afterwards.
+    """
+
+    def __init__(
+        self,
+        ucfg: UNetConfig,
+        e_sk: int,
+        e_rf: int,
+        *,
+        n_slots: int = 16,
+        threshold: float = 0.15,
+        t_bucket: int = 125,
+        mode: str = "cross",
+        dtype=jnp.float32,
+    ):
+        self._sk_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_sk, 1)[1:]
+        self._rf_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_rf, 1)[1:]
+        self._dtype = dtype
+        super().__init__(
+            n_slots, ucfg.ctx_dim, threshold=threshold, t_bucket=t_bucket, mode=mode
+        )
+        self._reset_state()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def _reset_state(self) -> None:
+        self.state = CacheState(
+            f_sk=jnp.zeros(self._sk_shape, self._dtype),
+            f_rf=jnp.zeros(self._rf_shape, self._dtype),
+        )
+
+    def reset(self) -> None:
+        """Drop all slots and counters (cold cache)."""
+        self.reset_meta()
+        self._reset_state()
+
+    # -- device insert -------------------------------------------------------
+
     def insert_many(
         self, f_sk: jax.Array, f_rf: jax.Array, lanes: np.ndarray, slots: np.ndarray
     ) -> None:
@@ -326,8 +373,173 @@ class FeatureCache:
             "cache_mode": self.mode,
             "cache_slots": self.n_slots,
             "cache_warm_slots": self.n_warm,
-            "cache_probes": self.probes,
-            "cache_probe_hits": self.probe_hits,
-            "cache_inserts": self.inserts,
-            "cache_evictions": self.evictions,
+            **self.counters(),
         }
+
+
+# ---------------------------------------------------------------------------
+# Shard-local feature rings for the mesh-sharded engine.
+# ---------------------------------------------------------------------------
+
+
+def _make_sharded_insert(mesh):
+    """Per-shard batched slot fill as one GSPMD scatter.
+
+    The lane features arrive in the sharded engine's ``[N, 2, L, C]``
+    layout and the cache state's slot axis is partitioned over the same
+    ``("data",)`` mesh, so each shard scatters its own captures into its
+    own local slots — feature tensors never cross a shard boundary.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    lane = P("data")
+
+    def body(cache: CacheState, f_sk, f_rf, lanes, slots):
+        # local: cache [S_local, 2, ...], f_* [P, 2, ...], lanes/slots [P]
+        return CacheState(
+            f_sk=cache.f_sk.at[slots].set(f_sk[lanes], mode="drop"),
+            f_rf=cache.f_rf.at[slots].set(f_rf[lanes], mode="drop"),
+        )
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(lane, lane, lane, lane, lane),
+        out_specs=lane,
+        check_rep=False,
+    )
+
+    def insert(cache, f_sk, f_rf, lanes, slots):
+        return mapped(cache, f_sk, f_rf, lanes, slots)
+
+    return jax.jit(insert, donate_argnums=(0,))
+
+
+class ShardedFeatureCache:
+    """Shard-local LRU rings sharing one mesh-sharded device state.
+
+    Partitioning the PR 2 feature cache follows the lane partition: shard
+    ``d`` owns slots ``[d * S, (d + 1) * S)`` of the combined
+    :class:`CacheState` (slot axis sharded over ``("data",)``), and one
+    :class:`SlotRing` of host metadata per shard.  Captures are only
+    probed, reserved and consumed *within* a shard — a lane's warm slots
+    live on the lane's own device, so serving a hit is a device-local
+    gather and reuse never ships feature tensors between shards.  The
+    cost is reuse reach: two near-identical prompts on different shards
+    cannot share features, which is exactly what the scheduler's
+    warm-shard routing (:class:`~repro.serving.scheduler.CacheAwareScheduler`
+    with ``shard`` hints) exists to avoid.
+
+    Slot indices at this API are *shard-local* (what the sharded
+    micro-step's ``feat_src`` consumes); only the device scatter sees the
+    combined slot axis.
+    """
+
+    def __init__(
+        self,
+        ucfg: UNetConfig,
+        e_sk: int,
+        e_rf: int,
+        mesh,
+        *,
+        slots_per_shard: int = 16,
+        threshold: float = 0.15,
+        t_bucket: int = 125,
+        mode: str = "cross",
+        dtype=jnp.float32,
+    ):
+        self.mesh = mesh
+        self.n_shards = mesh.shape["data"]
+        self.slots_per_shard = slots_per_shard
+        self.mode = mode
+        self.threshold = threshold
+        self.t_bucket = t_bucket
+        self.rings = [
+            SlotRing(
+                slots_per_shard, ucfg.ctx_dim,
+                threshold=threshold, t_bucket=t_bucket, mode=mode,
+            )
+            for _ in range(self.n_shards)
+        ]
+        total = self.n_shards * slots_per_shard
+        self._sk_shape = (total, 2) + SM.feat_shape(ucfg, e_sk, 1)[1:]
+        self._rf_shape = (total, 2) + SM.feat_shape(ucfg, e_rf, 1)[1:]
+        self._dtype = dtype
+        self._insert = _make_sharded_insert(mesh)
+        self.reset()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def reset(self) -> None:
+        from repro.common.sharding import lane_sharding
+
+        for ring in self.rings:
+            ring.reset_meta()
+        sh = lane_sharding(self.mesh)
+        self.state = CacheState(
+            f_sk=jax.device_put(jnp.zeros(self._sk_shape, self._dtype), sh),
+            f_rf=jax.device_put(jnp.zeros(self._rf_shape, self._dtype), sh),
+        )
+
+    # -- shard-local metadata ops -------------------------------------------
+
+    def probe(self, shard: int, t: int, sig: np.ndarray, rid: int) -> int | None:
+        return self.rings[shard].probe(t, sig, rid)
+
+    def note_hit(self, shard: int, slot: int) -> None:
+        self.rings[shard].note_hit(slot)
+
+    def note_miss(self, shard: int) -> None:
+        self.rings[shard].note_miss()
+
+    def reserve(
+        self, shard: int, t: int, sig: np.ndarray, rid: int,
+        exclude: set[int] | tuple = (),
+    ) -> int | None:
+        return self.rings[shard].reserve(t, sig, rid, exclude=exclude)
+
+    def plan_warmth(self, req, shard: int | None = None) -> float:
+        """Warmth of one shard's ring, or the best shard's when unpinned."""
+        if shard is not None:
+            return self.rings[shard].plan_warmth(req)
+        return max(ring.plan_warmth(req) for ring in self.rings)
+
+    @property
+    def n_warm(self) -> int:
+        return sum(ring.n_warm for ring in self.rings)
+
+    # -- device insert -------------------------------------------------------
+
+    def insert_many(
+        self, f_sk: jax.Array, f_rf: jax.Array, lanes: np.ndarray, slots: np.ndarray
+    ) -> None:
+        """Per-shard batched slot fill (one sharded scatter dispatch).
+
+        ``lanes``/``slots`` are padded to ``n_lanes`` with *shard-local*
+        indices laid out in per-shard segments: positions
+        ``[d * P, (d + 1) * P)`` hold shard ``d``'s entries.  Padding
+        entries carry ``slots[i] >= slots_per_shard`` and are dropped
+        device-side.
+        """
+        self.state = self._insert(
+            self.state, f_sk, f_rf,
+            jnp.asarray(lanes, jnp.int32), jnp.asarray(slots, jnp.int32),
+        )
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        agg = {
+            "cache_mode": self.mode,
+            "cache_shards": self.n_shards,
+            "cache_slots": self.n_shards * self.slots_per_shard,
+            "cache_warm_slots": self.n_warm,
+            "cache_probes": sum(r.probes for r in self.rings),
+            "cache_probe_hits": sum(r.probe_hits for r in self.rings),
+            "cache_inserts": sum(r.inserts for r in self.rings),
+            "cache_evictions": sum(r.evictions for r in self.rings),
+        }
+        agg["shard_hit_rates"] = [
+            round(r.probe_hits / r.probes, 3) if r.probes else 0.0 for r in self.rings
+        ]
+        return agg

@@ -26,12 +26,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import sharding as SH
 from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
 from repro.core import sampler as SM
 from repro.models import unet as U
 from repro.models import vae as V
 from repro.serving import lanes as LN
-from repro.serving.cache import FeatureCache, prompt_signature
+from repro.serving.cache import FeatureCache, ShardedFeatureCache, prompt_signature
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import FIFOScheduler
 
@@ -109,13 +110,27 @@ class EngineConfig:
     #: never demote a lane's first ``cache_min_step`` plan steps (protects
     #: the PNDM warmup / the paper's semantic-planning phase)
     cache_min_step: int = 1
+    #: lane shards over a ``("data",)`` device mesh; 1 = single-device
+    #: engine (exactly the pre-sharding behaviour), N > 1 = mesh-sharded
+    #: engine (``ShardedDiffusionEngine``) with ``n_lanes / N`` lanes and
+    #: ``cache_slots`` feature slots per shard
+    n_shards: int = 1
 
     def __post_init__(self):
         if self.cache_mode not in ("off", "intra", "cross"):
             raise ValueError(f"cache_mode must be off|intra|cross, got {self.cache_mode!r}")
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if self.n_lanes % self.n_shards != 0:
+            raise ValueError(
+                f"n_lanes={self.n_lanes} must divide evenly over n_shards={self.n_shards}"
+            )
 
 
 class DiffusionEngine:
+    #: summary tag; the mesh-sharded subclass overrides it
+    _mode_name = "continuous"
+
     def __init__(
         self,
         ucfg: UNetConfig,
@@ -134,25 +149,9 @@ class DiffusionEngine:
         self.scheduler = scheduler if scheduler is not None else FIFOScheduler()
         self.metrics = ServingMetrics()
 
-        self.cache: FeatureCache | None = None
-        if config.cache_mode != "off":
-            self.cache = FeatureCache(
-                ucfg, self.e_sk, self.e_rf,
-                n_slots=config.cache_slots,
-                threshold=config.cache_threshold,
-                t_bucket=config.cache_t_bucket,
-                mode=config.cache_mode,
-            )
+        self._build_device_state(params)  # sets self.cache/_state/_micro/_admit
         if hasattr(self.scheduler, "attach_cache"):
             self.scheduler.attach_cache(self.cache)
-
-        self._state = LN.init_lanes(
-            ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf
-        )
-        self._micro = LN.make_micro_step(
-            ucfg, dcfg, params, self.e_sk, self.e_rf, cached=self.cache is not None
-        )
-        self._admit = jax.jit(LN.admit, donate_argnums=(0,))
         self._decoder = None
         if vae_params is not None and config.decode_images:
             lhw = (ucfg.latent_size, ucfg.latent_size)
@@ -164,6 +163,27 @@ class DiffusionEngine:
         self._lane_step = np.zeros((n,), np.int64)
         self._lane_admit_s = np.zeros((n,), np.float64)
         self._stall = np.zeros((n,), np.int64)
+
+    def _build_device_state(self, params: Params) -> None:
+        """Construct the feature cache, lane state and jitted step/admit
+        functions (the mesh-sharded engine overrides exactly this)."""
+        config, ucfg = self.config, self.ucfg
+        self.cache: FeatureCache | None = None
+        if config.cache_mode != "off":
+            self.cache = FeatureCache(
+                ucfg, self.e_sk, self.e_rf,
+                n_slots=config.cache_slots,
+                threshold=config.cache_threshold,
+                t_bucket=config.cache_t_bucket,
+                mode=config.cache_mode,
+            )
+        self._state = LN.init_lanes(
+            ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf
+        )
+        self._micro = LN.make_micro_step(
+            ucfg, self.dcfg, params, self.e_sk, self.e_rf, cached=self.cache is not None
+        )
+        self._admit = jax.jit(LN.admit, donate_argnums=(0,))
 
     # -- submission ---------------------------------------------------------
 
@@ -397,10 +417,322 @@ class DiffusionEngine:
                 continue
             done.extend(self.step(now_s=clock(), clock=clock))
         self.metrics.wall_s = time.perf_counter() - t0
-        summary = dict(self.metrics.summary(), mode="continuous", lanes=self.config.n_lanes)
+        summary = dict(
+            self.metrics.summary(),
+            mode=self._mode_name,
+            lanes=self.config.n_lanes,
+            **self._summary_extra(),
+        )
         if self.cache is not None:
             summary.update(self.cache.stats())
         return done, summary
+
+    def _summary_extra(self) -> dict:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded continuous batching: contiguous lane shards, one GSPMD
+# micro-step, shard-local feature rings.
+# ---------------------------------------------------------------------------
+
+
+class ShardedDiffusionEngine(DiffusionEngine):
+    """Continuous batching with the lane axis sharded over a device mesh.
+
+    Device ``d`` of a :func:`repro.common.sharding.lane_mesh` owns lanes
+    ``[d * P, (d + 1) * P)`` (``P = n_lanes / n_shards``).  The micro-step
+    stays ONE jitted GSPMD program (``shard_map`` over ``("data",)``), but
+    the branch vote is *per shard*: each shard's scheduler-chosen class
+    drives its own ``lax.switch``, so one shard can run a FULL U-Net batch
+    while another runs SKETCH in the same dispatch — lane grouping no
+    longer has to agree across the whole machine, only within a shard.
+
+    Admission fills the emptiest shard first and retirement/backfill touch
+    only the retiring lane's shard — there is no cross-shard barrier
+    anywhere in the event loop.  The PR 2 feature cache partitions into
+    shard-local rings (:class:`~repro.serving.cache.ShardedFeatureCache`):
+    captures are only reusable within the shard that produced them, so
+    serving a warm hit is a device-local gather, and the cache-aware
+    scheduler routes warm requests to the shard holding their slots.
+
+    ``n_shards=1`` on a one-device mesh reproduces the unsharded engine's
+    results (different XLA program, same math — the sharded golden test
+    pins the agreement); ``--shards 1`` at the CLIs short-circuits to
+    :class:`DiffusionEngine` itself, which stays bit-exact by construction.
+    """
+
+    _mode_name = "sharded-continuous"
+
+    def __init__(
+        self,
+        ucfg: UNetConfig,
+        dcfg: DiffusionConfig,
+        params: Params,
+        vae_params: Params | None = None,
+        config: EngineConfig = EngineConfig(),
+        scheduler: FIFOScheduler | None = None,
+        mesh=None,
+    ):
+        self._mesh_arg = mesh
+        super().__init__(ucfg, dcfg, params, vae_params, config, scheduler=scheduler)
+
+    def _build_device_state(self, params: Params) -> None:
+        config, ucfg = self.config, self.ucfg
+        self.mesh = self._mesh_arg if self._mesh_arg is not None else SH.lane_mesh(
+            config.n_shards
+        )
+        self.n_shards = self.mesh.shape["data"]
+        if self.n_shards != config.n_shards:
+            raise ValueError(
+                f"mesh has {self.n_shards} data shards but config.n_shards="
+                f"{config.n_shards}"
+            )
+        self.lanes_per_shard = config.n_lanes // self.n_shards
+
+        self.cache: ShardedFeatureCache | None = None
+        if config.cache_mode != "off":
+            self.cache = ShardedFeatureCache(
+                ucfg, self.e_sk, self.e_rf, self.mesh,
+                slots_per_shard=config.cache_slots,
+                threshold=config.cache_threshold,
+                t_bucket=config.cache_t_bucket,
+                mode=config.cache_mode,
+            )
+        self._params = jax.device_put(params, SH.replicated_sharding(self.mesh))
+        self._state = LN.init_sharded_lanes(
+            ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf, self.mesh
+        )
+        self._micro = LN.make_sharded_micro_step(
+            ucfg, self.dcfg, self.e_sk, self.e_rf, self.mesh,
+            cached=self.cache is not None,
+        )
+        self._admit = LN.make_sharded_admit(self.mesh)
+        self._release = LN.make_sharded_release(self.mesh)
+
+    # -- shard geometry -------------------------------------------------------
+
+    def _shard_of(self, lane: int) -> int:
+        return int(lane) // self.lanes_per_shard
+
+    def _shard_active_counts(self) -> list[int]:
+        counts = [0] * self.n_shards
+        for i, r in enumerate(self._lane_req):
+            if r is not None:
+                counts[self._shard_of(i)] += 1
+        return counts
+
+    def _shard_remaining_branches(self, shard: int) -> list[np.ndarray]:
+        """Remaining branch vectors of the shard's own in-flight lanes —
+        the alignment scope for admission, since branch grouping is now
+        per shard."""
+        lo = shard * self.lanes_per_shard
+        out = []
+        for i in range(lo, lo + self.lanes_per_shard):
+            req = self._lane_req[i]
+            if req is not None:
+                out.append(req._lane_plan.branches[self._lane_step[i] : req.timesteps])
+        return out
+
+    def _summary_extra(self) -> dict:
+        return {"shards": self.n_shards, "lanes_per_shard": self.lanes_per_shard}
+
+    # -- event loop -----------------------------------------------------------
+
+    def _backfill(self, now_s: float) -> None:
+        """Admit queued requests, always into the emptiest shard first.
+
+        Each admission re-ranks the shards, so a burst spreads evenly
+        instead of piling into the lowest-numbered lanes; within a shard
+        the lowest empty lane wins (deterministic placement).
+        """
+        while True:
+            empty = [i for i, r in enumerate(self._lane_req) if r is None]
+            if not empty:
+                return
+            counts = self._shard_active_counts()
+            lane = min(empty, key=lambda i: (counts[self._shard_of(i)], i))
+            shard = self._shard_of(lane)
+            req = self.scheduler.next_request(
+                self._shard_remaining_branches(shard), shard=shard
+            )
+            if req is None:
+                return
+            lp = req._lane_plan
+            self._state = self._admit(
+                self._state,
+                jnp.int32(lane),
+                jnp.asarray(req.noise),
+                jnp.asarray(req.ctx),
+                jnp.asarray(lp.branches),
+                jnp.asarray(lp.ts),
+                jnp.asarray(lp.t_prev),
+                jnp.int32(lp.n_steps),
+            )
+            self._lane_req[lane] = req
+            self._lane_step[lane] = 0
+            self._lane_admit_s[lane] = now_s
+            self._stall[lane] = 0
+
+    def _probe_cache(self, active: list[int], planned: np.ndarray) -> dict[int, int]:
+        """{lane: *shard-local* slot} for FULL steps servable from the
+        lane's own shard ring (reuse never crosses a shard)."""
+        hits: dict[int, int] = {}
+        if self.cache is None:
+            return hits
+        for k, lane in enumerate(active):
+            if planned[k] != SM.FULL:
+                continue
+            req = self._lane_req[lane]
+            if not req.allow_cache or self._lane_step[lane] < self.config.cache_min_step:
+                continue
+            t = int(req._lane_plan.ts[self._lane_step[lane]])
+            slot = self.cache.probe(self._shard_of(lane), t, req._sig, req.rid)
+            if slot is not None:
+                hits[lane] = slot
+        return hits
+
+    def step(self, now_s: float = 0.0, clock: Callable[[], float] | None = None) -> list[CompletedRequest]:
+        """Backfill, run one sharded micro-step, retire finished lanes.
+
+        Mirrors :meth:`DiffusionEngine.step` with the branch vote taken
+        independently per shard: ``b_arr[s]`` is shard ``s``'s class and a
+        lane advances iff its effective class matches its own shard's
+        vote.  Shards with no active lanes are parked on REFINE (the
+        cheapest branch) with an all-false advance mask.
+        """
+        self._backfill(now_s)
+        active = self._active_lanes()
+        if not active:
+            return []
+
+        planned = np.array(
+            [self._lane_req[i]._lane_plan.branches[self._lane_step[i]] for i in active],
+            np.int64,
+        )
+        hit_slots = self._probe_cache(active, planned)
+        effective = planned.copy()
+        for k, lane in enumerate(active):
+            if lane in hit_slots:
+                effective[k] = SM.SKETCH
+
+        n = self.config.n_lanes
+        active_arr = np.asarray(active)
+        shard_ids = active_arr // self.lanes_per_shard
+        b_arr = np.full((self.n_shards,), SM.REFINE, np.int32)  # idle shards: cheapest
+        sel = np.zeros((n,), bool)
+        votes: list[tuple[int, int, np.ndarray]] = []  # (shard, b, advanced lanes)
+        for s in range(self.n_shards):
+            m = shard_ids == s
+            if not m.any():
+                continue
+            lanes_s = active_arr[m]
+            b = self.scheduler.pick_branch(effective[m], self._stall[lanes_s])
+            b_arr[s] = b
+            adv = lanes_s[effective[m] == b]
+            sel[adv] = True
+            votes.append((s, b, adv))
+
+        n_full = sum(len(adv) for _, b, adv in votes if b == SM.FULL)
+        n_demoted = 0
+        if self.cache is not None:
+            feat_src = np.full((n,), -1, np.int32)
+            for s, b, adv in votes:
+                if b != SM.SKETCH:
+                    continue
+                for lane in adv:
+                    slot = hit_slots.get(int(lane))
+                    if slot is not None:
+                        feat_src[lane] = slot
+                        self.cache.note_hit(s, slot)
+                        n_demoted += 1
+            self._state = self._micro(
+                self._state, self._params, jnp.asarray(b_arr), jnp.asarray(sel),
+                jnp.asarray(feat_src), self.cache.state,
+            )
+            # fresh captures -> shard-local warm slots, one sharded scatter:
+            # per-shard segments of the padded [n_lanes] index arrays carry
+            # local lane/slot indices (see ShardedFeatureCache.insert_many)
+            ins_lanes = np.zeros((n,), np.int32)
+            ins_slots = np.full((n,), self.cache.slots_per_shard, np.int32)
+            any_insert = False
+            for s, b, adv in votes:
+                if b != SM.FULL:
+                    continue
+                base = s * self.lanes_per_shard
+                pos = base
+                taken: set[int] = set()
+                for lane in adv:
+                    req = self._lane_req[lane]
+                    t = int(req._lane_plan.ts[self._lane_step[lane]])
+                    if req.allow_cache and self._lane_step[lane] >= self.config.cache_min_step:
+                        self.cache.note_miss(s)  # probed FULL executed as FULL
+                    if self.config.cache_mode == "intra" and not req.allow_cache:
+                        continue
+                    slot = self.cache.reserve(s, t, req._sig, req.rid, exclude=taken)
+                    if slot is None:  # shard ring smaller than the FULL batch
+                        continue
+                    taken.add(slot)
+                    ins_lanes[pos] = int(lane) - base  # shard-local lane index
+                    ins_slots[pos] = slot
+                    pos += 1
+                    any_insert = True
+            if any_insert:
+                self.cache.insert_many(
+                    self._state.f_sk, self._state.f_rf, ins_lanes, ins_slots
+                )
+        else:
+            self._state = self._micro(
+                self._state, self._params, jnp.asarray(b_arr), jnp.asarray(sel)
+            )
+
+        self._lane_step[sel] += 1
+        self._stall[active] += 1
+        self._stall[sel] = 0
+        shard_active = [int((shard_ids == s).sum()) for s in range(self.n_shards)]
+        self.metrics.record_step(
+            n, len(active), int(sel.sum()),
+            n_full=n_full, n_demoted=n_demoted, shard_active=shard_active,
+        )
+
+        done: list[CompletedRequest] = []
+        for lane in active:
+            req = self._lane_req[lane]
+            if self._lane_step[lane] < req.timesteps:
+                continue
+            latent = self._state.x[lane]
+            image = None
+            if self._decoder is not None:
+                image = np.asarray(self._decoder(latent[None])[0])
+            latent = np.asarray(latent)  # syncs the queued micro-steps
+            done.append(
+                CompletedRequest(
+                    rid=req.rid,
+                    latent=latent,
+                    image=image,
+                    submitted_s=req.arrival_s,
+                    admitted_s=self._lane_admit_s[lane],
+                    completed_s=clock() if clock is not None else now_s,
+                )
+            )
+            self._state = self._release(self._state, jnp.int32(lane))
+            self._lane_req[lane] = None
+            self.metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
+        return done
+
+
+def make_serving_engine(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    params: Params,
+    vae_params: Params | None = None,
+    config: EngineConfig = EngineConfig(),
+    scheduler: FIFOScheduler | None = None,
+) -> DiffusionEngine:
+    """Engine for ``config.n_shards``: the single-device engine at 1 (bit-
+    exact with the pre-sharding code path), the mesh-sharded engine above 1."""
+    cls = ShardedDiffusionEngine if config.n_shards > 1 else DiffusionEngine
+    return cls(ucfg, dcfg, params, vae_params, config, scheduler=scheduler)
 
 
 # ---------------------------------------------------------------------------

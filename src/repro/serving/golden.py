@@ -37,7 +37,12 @@ from repro.common.types import DiffusionConfig, PASPlan
 from repro.configs import get_unet_config
 from repro.core import sampler as SM
 from repro.models import unet as U
-from repro.serving.engine import DiffusionEngine, EngineConfig, GenRequest
+from repro.serving.engine import (
+    DiffusionEngine,
+    EngineConfig,
+    GenRequest,
+    ShardedDiffusionEngine,
+)
 
 GOLDEN_FILE = "golden_latents_sd_toy.npz"
 PARAMS_SEED = 0
@@ -104,6 +109,37 @@ def run_engine(
         cache_threshold=cache_threshold,
     )
     engine = DiffusionEngine(UCFG, DCFG, params, None, cfg)
+    done, _ = engine.run(golden_requests())
+    return {d.rid: d.latent for d in done}
+
+
+def run_sharded_engine(
+    params: dict[str, Any] | None = None,
+    *,
+    n_shards: int = 1,
+    cache_mode: str = "off",
+    cache_threshold: float = 0.0,
+) -> dict[int, np.ndarray]:
+    """Serve the golden stream through the mesh-sharded engine.
+
+    The sharded micro-step is a different XLA program (shard_map over the
+    lane mesh), so callers compare against the golden ``engine`` family
+    within the cross-program tolerance, not bit-exactly — except *between*
+    sharded runs (e.g. cache threshold 0 vs cache off), which share a
+    program family and must agree bit-for-bit.
+    """
+    params = golden_params() if params is None else params
+    cfg = EngineConfig(
+        n_lanes=N_LANES,
+        max_steps=MAX_STEPS,
+        l_sketch=L_SKETCH,
+        l_refine=L_REFINE,
+        decode_images=False,
+        cache_mode=cache_mode,
+        cache_threshold=cache_threshold,
+        n_shards=n_shards,
+    )
+    engine = ShardedDiffusionEngine(UCFG, DCFG, params, None, cfg)
     done, _ = engine.run(golden_requests())
     return {d.rid: d.latent for d in done}
 

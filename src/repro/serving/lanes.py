@@ -280,3 +280,276 @@ def make_micro_step(
         return _body(state, b_star, sel, entry_sk, entry_rf)
 
     return jax.jit(micro_step_cached, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded lanes: contiguous lane shards on a ("data",) mesh.
+#
+# The sharded engine partitions its lane axis over the devices of a
+# :func:`repro.common.sharding.lane_mesh`: device ``d`` owns lanes
+# ``[d * P, (d + 1) * P)`` with ``P = n_lanes // n_shards``.  Two layout
+# changes versus :class:`LaneState` make every per-lane tensor shard
+# cleanly on its *leading* axis:
+#
+# * the CFG-doubled ``[2N, ...]`` arrays become ``[N, 2, ...]`` (pair axis
+#   second: index 0 = cond, 1 = uncond), so a lane's cond/uncond pair
+#   always lives on the lane's own device, and
+# * the prompt conditioning is stored per-lane as ``ctx [N, 2, ...]``.
+#
+# The micro-step is ONE jitted GSPMD program built with ``shard_map``:
+# each shard runs the branch ``lax.switch`` on its *own* scalar branch
+# class, so shard A can execute a FULL U-Net batch while shard B executes
+# SKETCH in the same program — no collectives appear in the body (the
+# U-Net, scheduler step and cache gather are all lane-local), which is
+# what lets per-shard control flow coexist with SPMD.
+# ---------------------------------------------------------------------------
+
+
+class ShardedLaneState(NamedTuple):
+    """Per-lane sampler state with every leaf lane-major on axis 0.
+
+    Identical information content to :class:`LaneState`; the CFG pair axis
+    moves from row-blocked ``[2N]`` to ``[N, 2]`` so the whole pytree
+    shards over the lane axis with a single ``P("data")`` spec.
+    """
+
+    x: jax.Array  # [N, L, C] current latent
+    ets: jax.Array  # [N, 4, L, C] PNDM eps ring
+    n_ets: jax.Array  # [N] PNDM warmup count
+    f_sk: jax.Array  # [N, 2, L_sk, C_sk] sketch-entry features (cond, uncond)
+    f_rf: jax.Array  # [N, 2, L_rf, C_rf] refine-entry features
+    ctx: jax.Array  # [N, 2, ctx_len, ctx_dim] conditioning (uncond rows zero)
+    branches: jax.Array  # [N, max_steps]
+    ts: jax.Array  # [N, max_steps]
+    t_prev: jax.Array  # [N, max_steps]
+    step: jax.Array  # [N]
+    n_steps: jax.Array  # [N]
+
+    @property
+    def n_lanes(self) -> int:
+        return self.x.shape[0]
+
+    def active_mask(self) -> jax.Array:
+        return self.step < self.n_steps
+
+
+def init_sharded_lanes(
+    ucfg: UNetConfig,
+    n_lanes: int,
+    max_steps: int,
+    e_sk: int,
+    e_rf: int,
+    mesh,
+    dtype=jnp.float32,
+) -> ShardedLaneState:
+    """All-empty lane state, placed shard-by-shard over the lane mesh."""
+    from repro.common.sharding import lane_sharding
+
+    n_shards = mesh.shape["data"]
+    if n_lanes % n_shards != 0:
+        raise ValueError(f"n_lanes={n_lanes} must divide over {n_shards} shards")
+    L = ucfg.latent_size**2
+    c = ucfg.in_channels
+    sk = SM.feat_shape(ucfg, e_sk, 1)[1:]
+    rf = SM.feat_shape(ucfg, e_rf, 1)[1:]
+    sh = lane_sharding(mesh)
+    z = lambda shape, dt=dtype: jax.device_put(jnp.zeros(shape, dt), sh)
+    return ShardedLaneState(
+        x=z((n_lanes, L, c)),
+        ets=z((n_lanes, 4, L, c)),
+        n_ets=z((n_lanes,), jnp.int32),
+        f_sk=z((n_lanes, 2) + sk),
+        f_rf=z((n_lanes, 2) + rf),
+        ctx=z((n_lanes, 2, ucfg.ctx_len, ucfg.ctx_dim)),
+        branches=z((n_lanes, max_steps), jnp.int32),
+        ts=z((n_lanes, max_steps), jnp.int32),
+        t_prev=z((n_lanes, max_steps), jnp.int32),
+        step=z((n_lanes,), jnp.int32),
+        n_steps=z((n_lanes,), jnp.int32),
+    )
+
+
+def make_sharded_admit(mesh):
+    """Jitted single-request scatter that preserves lane shardings."""
+    from repro.common.sharding import lane_sharding
+
+    sh = lane_sharding(mesh)
+
+    def admit_sharded(
+        state: ShardedLaneState,
+        lane: jax.Array,
+        noise: jax.Array,
+        ctx: jax.Array,
+        branches: jax.Array,
+        ts: jax.Array,
+        t_prev: jax.Array,
+        n_steps: jax.Array,
+    ) -> ShardedLaneState:
+        return ShardedLaneState(
+            x=state.x.at[lane].set(noise),
+            ets=state.ets.at[lane].set(0.0),
+            n_ets=state.n_ets.at[lane].set(0),
+            f_sk=state.f_sk.at[lane].set(0.0),
+            f_rf=state.f_rf.at[lane].set(0.0),
+            ctx=state.ctx.at[lane, 0].set(ctx).at[lane, 1].set(0.0),
+            branches=state.branches.at[lane].set(branches),
+            ts=state.ts.at[lane].set(ts),
+            t_prev=state.t_prev.at[lane].set(t_prev),
+            step=state.step.at[lane].set(0),
+            n_steps=state.n_steps.at[lane].set(n_steps),
+        )
+
+    return jax.jit(admit_sharded, donate_argnums=(0,), out_shardings=sh)
+
+
+def make_sharded_release(mesh):
+    from repro.common.sharding import lane_sharding
+
+    sh = lane_sharding(mesh)
+
+    def release_sharded(state: ShardedLaneState, lane: jax.Array) -> ShardedLaneState:
+        return state._replace(
+            step=state.step.at[lane].set(0),
+            n_steps=state.n_steps.at[lane].set(0),
+        )
+
+    return jax.jit(release_sharded, donate_argnums=(0,), out_shardings=sh)
+
+
+def _select_local(own: jax.Array, slots: jax.Array, src: jax.Array) -> jax.Array:
+    """Shard-local captured-vs-cached selection in the [P, 2, ...] layout.
+
+    ``own`` [P, 2, L, C] lane features, ``slots`` [S_local, 2, L, C] the
+    shard's cache ring, ``src`` [P] local slot per lane (-1 = own).  Exact
+    passthrough when ``src`` is all -1 (the sharded golden test pins this).
+    """
+    pick = slots[jnp.clip(src, 0, slots.shape[0] - 1)]  # [P, 2, L, C]
+    use = (src >= 0)[:, None, None, None]
+    return jnp.where(use, pick, own)
+
+
+def make_sharded_micro_step(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    e_sk: int,
+    e_rf: int,
+    mesh,
+    *,
+    cached: bool = False,
+):
+    """Build the jitted mesh-sharded micro-step (one GSPMD program).
+
+    Signature (``cached=False``): ``(state, params, b_arr, sel)`` where
+    ``b_arr`` is a per-*shard* ``[n_shards]`` int32 branch-class vector —
+    each device switches on its own scalar, so different shards execute
+    different branch classes in the same program — and ``sel`` is the
+    host-mirrored per-lane advance mask (a lane advances iff its
+    *effective* class equals its shard's chosen class).
+
+    ``cached=True`` adds ``(feat_src, cache)``: ``feat_src`` [n_lanes]
+    int32 holds *shard-local* slot indices (-1 = own features) and
+    ``cache`` is the sharded :class:`~repro.serving.cache.CacheState`
+    whose slot axis is partitioned over the same mesh, so the feature
+    gather never leaves the shard.
+
+    ``params`` are passed explicitly (replicated spec) rather than closed
+    over so the shard_map body stays closure-free over device arrays.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    sched = D.make_schedule(dcfg)
+    guidance = dcfg.guidance_scale
+    use_pndm = dcfg.scheduler == "pndm"
+
+    def local_body(params, state, b_local, sel, entry_sk, entry_rf):
+        # everything here is shard-local: P lanes, no collectives
+        p = state.x.shape[0]
+        idx = jnp.minimum(state.step, state.branches.shape[1] - 1)
+        take = lambda a: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
+        t = take(state.ts)
+        tp = take(state.t_prev)
+        ctx2 = jnp.concatenate([state.ctx[:, 0], state.ctx[:, 1]], axis=0)
+        pair2 = lambda a: jnp.concatenate([a[:, 0], a[:, 1]], axis=0)  # [P,2,..]->[2P,..]
+        unpair = lambda a: jnp.stack([a[:p], a[p:]], axis=1)  # [2P,..]->[P,2,..]
+
+        def full_branch(_):
+            eps, cap = SM.cfg_unet_step(
+                ucfg, params, guidance, state.x, t, ctx2, capture=(e_sk, e_rf)
+            )
+            return eps, unpair(cap[e_sk]), unpair(cap[e_rf])
+
+        def sketch_branch(_):
+            eps, _ = SM.cfg_unet_step(
+                ucfg, params, guidance, state.x, t, ctx2,
+                entry_step=e_sk, entry_feat=pair2(entry_sk),
+            )
+            return eps, entry_sk, entry_rf
+
+        def refine_branch(_):
+            eps, _ = SM.cfg_unet_step(
+                ucfg, params, guidance, state.x, t, ctx2,
+                entry_step=e_rf, entry_feat=pair2(entry_rf),
+            )
+            return eps, entry_sk, entry_rf
+
+        eps, f_sk_new, f_rf_new = jax.lax.switch(
+            jnp.clip(b_local[0], 0, 2), (full_branch, sketch_branch, refine_branch), None
+        )
+
+        if use_pndm:
+            x_new, ets_new, n_new = D.pndm_step_batched(
+                sched, state.ets, state.n_ets, state.x, eps, t, tp
+            )
+        else:
+            x_new = D.ddim_step_batched(sched, state.x, eps, t, tp)
+            ets_new, n_new = state.ets, state.n_ets
+
+        m3 = sel[:, None, None]
+        m4 = sel[:, None, None, None]
+        return state._replace(
+            x=jnp.where(m3, x_new, state.x),
+            ets=jnp.where(m4, ets_new, state.ets),
+            n_ets=jnp.where(sel, n_new, state.n_ets),
+            f_sk=jnp.where(m4, f_sk_new, state.f_sk),
+            f_rf=jnp.where(m4, f_rf_new, state.f_rf),
+            step=state.step + sel.astype(jnp.int32),
+        )
+
+    lane = P("data")
+    repl = P()
+
+    if not cached:
+
+        def shard_body(params, state, b_arr, sel):
+            entry_sk, entry_rf = state.f_sk, state.f_rf
+            return local_body(params, state, b_arr, sel, entry_sk, entry_rf)
+
+        mapped = shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(repl, lane, lane, lane),
+            out_specs=lane,
+            check_rep=False,
+        )
+
+        def micro_step(state, params, b_arr, sel):
+            return mapped(params, state, b_arr, sel)
+
+        return jax.jit(micro_step, donate_argnums=(0,))
+
+    def shard_body_cached(params, state, b_arr, sel, feat_src, cache):
+        entry_sk = _select_local(state.f_sk, cache.f_sk, feat_src)
+        entry_rf = _select_local(state.f_rf, cache.f_rf, feat_src)
+        return local_body(params, state, b_arr, sel, entry_sk, entry_rf)
+
+    mapped_cached = shard_map(
+        shard_body_cached, mesh=mesh,
+        in_specs=(repl, lane, lane, lane, lane, lane),
+        out_specs=lane,
+        check_rep=False,
+    )
+
+    def micro_step_cached(state, params, b_arr, sel, feat_src, cache):
+        return mapped_cached(params, state, b_arr, sel, feat_src, cache)
+
+    return jax.jit(micro_step_cached, donate_argnums=(0,))

@@ -9,6 +9,7 @@ latency).  ``summary()`` collapses everything into the flat dict printed by
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -19,6 +20,8 @@ class ServingMetrics:
     queue_waits_s: list[float] = dataclasses.field(default_factory=list)
     occupancy: list[float] = dataclasses.field(default_factory=list)
     advance_eff: list[float] = dataclasses.field(default_factory=list)
+    #: per-micro-step active-lane count per shard (sharded engine only)
+    shard_active: list[list[int]] = dataclasses.field(default_factory=list)
     micro_steps: int = 0
     lane_steps_advanced: int = 0
     #: FULL lane-steps actually executed (each one a full U-Net pass)
@@ -34,6 +37,7 @@ class ServingMetrics:
         n_advanced: int,
         n_full: int = 0,
         n_demoted: int = 0,
+        shard_active: Sequence[int] | None = None,
     ) -> None:
         self.micro_steps += 1
         self.lane_steps_advanced += n_advanced
@@ -42,6 +46,8 @@ class ServingMetrics:
         self.occupancy.append(n_active / max(n_lanes, 1))
         if n_active:
             self.advance_eff.append(n_advanced / n_active)
+        if shard_active is not None:
+            self.shard_active.append(list(shard_active))
 
     def record_completion(self, latency_s: float, queue_wait_s: float) -> None:
         self.latencies_s.append(latency_s)
@@ -73,4 +79,23 @@ class ServingMetrics:
             "cache_hit_rate": round(
                 self.demoted_steps / max(self.full_steps + self.demoted_steps, 1), 3
             ),
+            **self._shard_summary(),
+        }
+
+    def _shard_summary(self) -> dict:
+        """Lane-occupancy balance across shards (sharded engine only).
+
+        ``shard_occupancy_balance`` is min/max of the per-shard mean
+        active-lane counts: 1.0 = perfectly balanced admission, 0.0 = at
+        least one shard sat idle the whole run.
+        """
+        if not self.shard_active:
+            return {}
+        per_shard = np.asarray(self.shard_active, np.float64).mean(axis=0)
+        peak = float(per_shard.max())
+        return {
+            "shard_mean_active": [round(float(v), 3) for v in per_shard],
+            "shard_occupancy_balance": round(
+                float(per_shard.min()) / peak, 3
+            ) if peak > 0 else 0.0,
         }

@@ -40,11 +40,16 @@ class FIFOScheduler:
     def peek_all(self) -> list:
         return list(self._queue)
 
-    def next_request(self, lane_branches: Sequence[np.ndarray] = ()):
+    def next_request(
+        self, lane_branches: Sequence[np.ndarray] = (), shard: int | None = None
+    ):
         """Pop the request to admit next, or None if the queue is empty.
 
         ``lane_branches`` holds each in-flight lane's *remaining* branch
-        vector (``branches[step:n_steps]``); FIFO ignores it.
+        vector (``branches[step:n_steps]``); FIFO ignores it.  ``shard``
+        identifies the shard whose lane is being backfilled (the sharded
+        engine passes its per-shard flight as ``lane_branches``); FIFO
+        ignores it too.
         """
         if not self._queue:
             return None
@@ -100,7 +105,9 @@ class PlanAwareScheduler(FIFOScheduler):
 
     # -- subclass hooks ------------------------------------------------------
 
-    def _score(self, req, lane_branches: Sequence[np.ndarray]) -> float:
+    def _score(
+        self, req, lane_branches: Sequence[np.ndarray], shard: int | None = None
+    ) -> float:
         """Admission preference for one windowed request (higher = sooner)."""
         return self._alignment(req.branch_vector(), lane_branches)
 
@@ -108,7 +115,9 @@ class PlanAwareScheduler(FIFOScheduler):
         """Whether window scoring can beat plain FIFO right now."""
         return len(lane_branches) > 0
 
-    def next_request(self, lane_branches: Sequence[np.ndarray] = ()):
+    def next_request(
+        self, lane_branches: Sequence[np.ndarray] = (), shard: int | None = None
+    ):
         if not self._queue:
             return None
         if (
@@ -119,7 +128,7 @@ class PlanAwareScheduler(FIFOScheduler):
             self._head_skips = 0
             return self._queue.popleft()
         window = list(self._queue)[: self.window]
-        scores = [self._score(r, lane_branches) for r in window]
+        scores = [self._score(r, lane_branches, shard) for r in window]
         best = int(np.argmax(scores))  # stable: FIFO wins ties
         self._head_skips = self._head_skips + 1 if best else 0
         self._queue.remove(window[best])
@@ -139,6 +148,12 @@ class CacheAwareScheduler(PlanAwareScheduler):
     still forced after ``max_head_skips`` bypasses, and ``window`` bounds
     reordering regardless of warmth.
 
+    With a *sharded* cache the engine passes the shard being backfilled:
+    warmth is then scored against that shard's ring only, which is what
+    routes a cache-warm request to the shard actually holding its warm
+    slots (admitting it anywhere else would score — and hit — nothing,
+    since reuse is shard-local).
+
     Without an attached cache (or with a cold one) this degrades exactly to
     :class:`PlanAwareScheduler`.
     """
@@ -149,13 +164,17 @@ class CacheAwareScheduler(PlanAwareScheduler):
         self.cache = None
 
     def attach_cache(self, cache) -> None:
-        """Called by the engine that owns the :class:`FeatureCache`."""
+        """Called by the engine that owns the feature cache (single-ring
+        :class:`~repro.serving.cache.FeatureCache` or mesh-sharded
+        :class:`~repro.serving.cache.ShardedFeatureCache`)."""
         self.cache = cache
 
-    def _score(self, req, lane_branches: Sequence[np.ndarray]) -> float:
-        score = super()._score(req, lane_branches)
+    def _score(
+        self, req, lane_branches: Sequence[np.ndarray], shard: int | None = None
+    ) -> float:
+        score = super()._score(req, lane_branches, shard)
         if self.cache is not None:
-            score += self.warmth_weight * self.cache.plan_warmth(req)
+            score += self.warmth_weight * self.cache.plan_warmth(req, shard)
         return score
 
     def _consider_window(self, lane_branches: Sequence[np.ndarray]) -> bool:

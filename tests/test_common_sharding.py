@@ -1,0 +1,106 @@
+"""Mesh/PartitionSpec helpers in ``repro.common.sharding``.
+
+Pure host-side geometry — no multi-device requirement: pod and non-pod
+meshes are built from the single CPU device via ``Mesh`` with a reshaped
+device array only when enough devices exist, otherwise from explicitly
+constructed 1-device meshes (the helpers only read ``axis_names`` and
+``shape``).
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common import sharding as SH
+
+
+def _mesh_1dev(axis_names: tuple[str, ...]) -> Mesh:
+    """1-device mesh with the given axis names (all axes size 1)."""
+    dev = np.asarray(jax.devices()[:1]).reshape((1,) * len(axis_names))
+    return Mesh(dev, axis_names)
+
+
+# ---------------------------------------------------------------------------
+# batch_axes / dp_size / tp_size
+# ---------------------------------------------------------------------------
+
+
+def test_batch_axes_non_pod():
+    mesh = _mesh_1dev(("data", "model"))
+    assert SH.batch_axes(mesh) == ("data",)
+
+
+def test_batch_axes_pod():
+    mesh = _mesh_1dev(("pod", "data", "model"))
+    assert SH.batch_axes(mesh) == ("pod", "data")
+
+
+def test_dp_tp_sizes_non_pod():
+    mesh = _mesh_1dev(("data", "model"))
+    assert SH.dp_size(mesh) == 1
+    assert SH.tp_size(mesh) == 1
+
+
+def test_dp_size_multiplies_pod_axes():
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >= 2 devices for a non-trivial pod mesh")
+    devs = np.asarray(jax.devices()[:2]).reshape(2, 1, 1)
+    mesh = Mesh(devs, ("pod", "data", "model"))
+    assert SH.batch_axes(mesh) == ("pod", "data")
+    assert SH.dp_size(mesh) == 2
+    assert SH.tp_size(mesh) == 1
+
+
+# ---------------------------------------------------------------------------
+# divisible_spec: the uneven-tiling fallback
+# ---------------------------------------------------------------------------
+
+
+def test_divisible_spec_keeps_axis_when_even():
+    assert SH.divisible_spec(32, 8, "model") == "model"
+
+
+def test_divisible_spec_drops_axis_when_uneven():
+    # odd vocab sizes like 32001 must replicate instead of padding
+    assert SH.divisible_spec(32001, 8, "model") is None
+
+
+def test_divisible_spec_none_axis_passthrough():
+    assert SH.divisible_spec(7, 8, None) is None
+
+
+# ---------------------------------------------------------------------------
+# stacked / lane_mesh
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_prepends_replicated_axis():
+    assert SH.stacked(P("data", "model")) == P(None, "data", "model")
+
+
+def test_lane_mesh_single_shard():
+    mesh = SH.lane_mesh(1)
+    assert mesh.axis_names == ("data",)
+    assert mesh.shape["data"] == 1
+
+
+def test_lane_mesh_rejects_bad_counts():
+    with pytest.raises(ValueError):
+        SH.lane_mesh(0)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        SH.lane_mesh(len(jax.devices()) + 1)
+
+
+def test_lane_mesh_all_devices():
+    n = len(jax.devices())
+    mesh = SH.lane_mesh(n)
+    assert mesh.shape["data"] == n
+    assert SH.batch_axes(mesh) == ("data",)
+    assert SH.dp_size(mesh) == n
+
+
+def test_lane_sharding_specs():
+    mesh = SH.lane_mesh(1)
+    assert SH.lane_sharding(mesh).spec == P("data")
+    assert SH.replicated_sharding(mesh).spec == P()

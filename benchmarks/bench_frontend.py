@@ -1,0 +1,231 @@
+"""Frontend serving benchmark: the async HTTP layer vs driving the engine
+directly, plus cancellation behaviour under load.
+
+Three phases against ONE engine (compile-warmed up front, so every phase
+measures steady-state serving):
+
+1. **direct** — ``engine.run`` on a closed (everything-queued) request
+   stream: the engine's raw capacity with no HTTP in the path.
+2. **http-closed** — the same-shaped workload through the full stack
+   (driver thread -> asyncio frontend -> stdlib HTTP client pool):
+   goodput, p50/p99 latency, in-flight lane occupancy.  The headline gate
+   is ``frontend_goodput_ratio`` = http goodput / direct throughput — the
+   frontend is a thin streaming layer over the same micro-steps, so this
+   should sit near 1.0; a collapse means the async plumbing (event
+   trampolines, chunked writes, driver handoff) started costing real
+   lane-steps.
+3. **http-cancel** — the same stream with the first K requests cancelled
+   mid-denoise: survivors must all complete (``cancel_completion_ratio``)
+   and the cancel acknowledgement latency + wasted lane-steps ride along
+   as headline numbers (cancellation overhead).
+
+``--json PATH`` writes ``BENCH_frontend.json`` in the same shape as
+``BENCH_serving.json``: machine-portable ratio ``gates`` (compared against
+``benchmarks/baselines/BENCH_frontend.json`` by ``tools/compare_bench.py``)
+plus absolute ``headline`` numbers for trend inspection.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_frontend.py            # full run
+  PYTHONPATH=src:. python benchmarks/bench_frontend.py --smoke    # CI-sized
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src:. python benchmarks/bench_frontend.py --shards 4 --lanes 8
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+
+import jax
+
+from benchmarks.common import emit
+from repro.common.types import DiffusionConfig
+from repro.configs import get_unet_config
+from repro.models import unet as U
+from repro.serving import (
+    EngineConfig,
+    EngineDriver,
+    GenRequest,
+    HTTPFrontend,
+    PlanAwareScheduler,
+    RequestFactory,
+    make_serving_engine,
+)
+from repro.serving.client import FrontendClient, make_payloads, run_load
+from repro.serving.metrics import ServingMetrics
+
+
+def _direct_requests(factory: RequestFactory, payloads: list[dict]) -> list[GenRequest]:
+    """The direct-phase stream, materialized by the SAME factory the HTTP
+    path uses, so both phases serve identical work."""
+    return [factory.make(dict(p, stream=False)) for p in payloads]
+
+
+async def _http_phase(engine, factory, *, payloads, concurrency, cancel, max_inflight):
+    """One driver+frontend lifetime serving ``payloads`` closed-loop."""
+    driver = EngineDriver(engine, max_inflight=max_inflight)
+    driver.start()
+    frontend = HTTPFrontend(driver, factory, "127.0.0.1", 0)
+    await frontend.start()
+    serve_task = asyncio.create_task(frontend.serve_until_shutdown())
+    client = FrontendClient("127.0.0.1", frontend.port)
+    stats = await run_load(
+        client,
+        requests=len(payloads),
+        mode="closed",
+        concurrency=concurrency,
+        t_lo=min(p["timesteps"] for p in payloads),
+        t_hi=max(p["timesteps"] for p in payloads),
+        plan_mode="mixed",
+        cancel=cancel,
+        seed=0,
+        payloads=payloads,
+    )
+    await client.shutdown()
+    summary = await serve_task
+    return stats, summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--t-lo", type=int, default=3)
+    ap.add_argument("--t-hi", type=int, default=6)
+    ap.add_argument("--concurrency", type=int, default=8, help="closed-loop client workers")
+    ap.add_argument("--cancel", type=int, default=3, help="mid-denoise cancels in phase 3")
+    ap.add_argument(
+        "--max-inflight", type=int, default=None,
+        help="frontend admission bound (default: 4x lanes)",
+    )
+    ap.add_argument(
+        "--shards", type=int, default=1,
+        help="serve through the mesh-sharded engine (needs that many devices)",
+    )
+    ap.add_argument(
+        "--json", type=str, default=None, metavar="PATH",
+        help="write the benchmark-trajectory JSON (BENCH_frontend.json)",
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests, args.lanes, args.concurrency, args.cancel = 8, 2, 4, 1
+    if args.shards > 1 and args.lanes % args.shards:
+        raise SystemExit(f"--lanes {args.lanes} must divide over --shards {args.shards}")
+    max_inflight = args.max_inflight or 4 * args.lanes
+
+    ucfg = get_unet_config("sd_toy")
+    n_up = U.n_up_steps(ucfg)
+    dcfg = DiffusionConfig(timesteps_sample=args.t_hi)
+    params = U.init_unet(jax.random.key(args.seed), ucfg)
+    cfg = EngineConfig(
+        n_lanes=args.lanes,
+        max_steps=args.t_hi,
+        l_sketch=min(3, n_up),
+        l_refine=min(2, n_up),
+        decode_images=False,
+        n_shards=args.shards,
+    )
+    engine = make_serving_engine(
+        ucfg, dcfg, params, None, cfg, scheduler=PlanAwareScheduler(window=4)
+    )
+    factory = RequestFactory(ucfg, dcfg, cfg)
+
+    payloads = make_payloads(args.requests, args.t_lo, args.t_hi, "mixed", args.seed)
+
+    # -- compile warmup (both branch classes + admission + retirement) -------
+    warm = _direct_requests(factory, make_payloads(2 * args.lanes, args.t_lo, args.t_hi, "mixed", 7))
+    engine.run(warm, realtime=False)
+
+    # -- phase 1: direct engine capacity -------------------------------------
+    direct_reqs = _direct_requests(factory, payloads)
+    engine.metrics = ServingMetrics()
+    _, s_direct = engine.run(direct_reqs, realtime=False)
+    direct_tp = s_direct["throughput_req_s"]
+    emit("frontend", "direct/throughput_req_s", direct_tp, "req/s", "closed loop, no HTTP")
+    emit("frontend", "direct/p50_latency_s", s_direct["p50_latency_s"], "s")
+
+    # -- phase 2: the same workload over HTTP --------------------------------
+    engine.metrics = ServingMetrics()
+    stats2, summary2 = asyncio.run(_http_phase(
+        engine, factory,
+        payloads=payloads, concurrency=args.concurrency, cancel=0,
+        max_inflight=max_inflight,
+    ))
+    s2 = stats2.summary()
+    goodput_ratio = s2["goodput_req_s"] / max(direct_tp, 1e-9)
+    completion_ratio = stats2.completed / max(stats2.submitted, 1)
+    occupancy = summary2.get("mean_occupancy", 0.0)
+    emit("frontend", "http/goodput_req_s", s2["goodput_req_s"], "req/s")
+    emit("frontend", "http/p50_latency_s", s2["p50_latency_s"], "s")
+    emit("frontend", "http/p99_latency_s", s2["p99_latency_s"], "s")
+    emit("frontend", "http/mean_occupancy", occupancy, "", "in-flight lane occupancy")
+    emit("frontend", "http/rejected_429", stats2.rejected, "req")
+    emit(
+        "frontend", "acceptance/frontend_goodput_ratio", round(goodput_ratio, 3), "x",
+        "http goodput vs direct engine.run (1.0 = free frontend)",
+    )
+
+    # -- phase 3: cancellation under load ------------------------------------
+    engine.metrics = ServingMetrics()
+    stats3, summary3 = asyncio.run(_http_phase(
+        engine, factory,
+        payloads=payloads, concurrency=args.concurrency, cancel=args.cancel,
+        max_inflight=max_inflight,
+    ))
+    s3 = stats3.summary()
+    survivors = stats3.submitted - stats3.cancelled
+    cancel_completion = stats3.completed / max(survivors, 1)
+    emit("frontend", "cancel/cancelled", stats3.cancelled, "req", f"requested {args.cancel}")
+    emit("frontend", "cancel/survivor_completion", round(cancel_completion, 3), "")
+    emit("frontend", "cancel/ack_p50_s", s3["cancel_ack_p50_s"], "s", "cancel -> terminal event")
+    emit("frontend", "cancel/wasted_lane_steps", stats3.cancelled_lane_steps, "steps")
+    emit(
+        "frontend", "cancel/drained_clean", int(bool(summary3.get("drained"))), "",
+        "server drained with no orphaned lanes",
+    )
+
+    if args.json:
+        out = {
+            "bench": "frontend",
+            "config": {
+                "requests": args.requests,
+                "lanes": args.lanes,
+                "shards": args.shards,
+                "t_lo": args.t_lo,
+                "t_hi": args.t_hi,
+                "concurrency": args.concurrency,
+                "cancel": args.cancel,
+                "max_inflight": max_inflight,
+                "seed": args.seed,
+            },
+            # ratio gates: portable across machine speeds (compare_bench.py)
+            "gates": {
+                "frontend_goodput_ratio": round(goodput_ratio, 3),
+                "completion_ratio": round(completion_ratio, 3),
+                "mean_inflight_occupancy": round(occupancy, 3),
+                "cancel_completion_ratio": round(cancel_completion, 3),
+            },
+            "headline": {
+                "direct_throughput_req_s": direct_tp,
+                "http_goodput_req_s": s2["goodput_req_s"],
+                "http_p50_latency_s": s2["p50_latency_s"],
+                "http_p99_latency_s": s2["p99_latency_s"],
+                "cancel_ack_p50_s": s3["cancel_ack_p50_s"],
+                "cancel_wasted_lane_steps": stats3.cancelled_lane_steps,
+                "rejected_429": stats2.rejected + stats3.rejected,
+                "drained_clean": bool(summary2.get("drained") and summary3.get("drained")),
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        emit("frontend", "trajectory_json", args.json, "", "written")
+
+    assert completion_ratio == 1.0, "phase 2 lost requests"
+    assert cancel_completion == 1.0, "phase 3 lost survivors"
+
+
+if __name__ == "__main__":
+    main()

@@ -24,18 +24,32 @@ into shard-local rings.  ``--shards 1`` is exactly the single-device
 engine.  On CPU-only hosts expose devices first, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--http HOST:PORT`` serves the continuous engine over an asyncio HTTP
+frontend (``repro.serving.frontend``) instead of running a synthetic batch:
+the engine event loop moves onto a dedicated driver thread, requests
+arrive as ``POST /generate`` and stream per-step progress as NDJSON,
+``POST /cancel`` aborts mid-denoise, backpressure answers 429, and
+SIGINT/SIGTERM (or ``POST /shutdown``) drain gracefully.  ``PORT 0``
+binds an ephemeral port; ``--port-file`` publishes the bound port for
+scripted clients (``python -m repro.serving.client``).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --requests 8
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --engine static
   PYTHONPATH=src python -m repro.launch.serve --mode diffusion --pas --cache cross
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --mode diffusion --batch 8 --shards 4
+  PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
+    --http 127.0.0.1:8080 --batch 4 --timesteps 20
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch gemma3-1b --requests 4
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
+import os
+import signal
 import time
 from typing import Any
 
@@ -43,7 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.types import DiffusionConfig, PASPlan
+from repro.common.types import DiffusionConfig
 from repro.configs import ARCH_IDS, get_lm_config, get_unet_config
 from repro.launch.steps import get_adapter
 from repro.models import unet as U
@@ -51,8 +65,12 @@ from repro.models import vae as V
 from repro.serving import (
     CacheAwareScheduler,
     EngineConfig,
+    EngineDriver,
     GenRequest,
+    HTTPFrontend,
     PlanAwareScheduler,
+    RequestFactory,
+    default_pas_plan as _serving_default_pas_plan,
     make_serving_engine,
     serve_static,
 )
@@ -90,17 +108,23 @@ def pack_batches(reqs: list[Request], batch: int) -> list[list[Request]]:
 # ---------------------------------------------------------------------------
 
 
-def default_pas_plan(timesteps: int, n_up: int) -> PASPlan:
-    """The CLI's stock phase-aware plan (same shape as the seed server's)."""
-    plan = PASPlan(
-        t_sketch=timesteps // 2,
-        t_complete=max(2, timesteps // 10),
-        t_sparse=4,
-        l_sketch=min(3, n_up),
-        l_refine=min(2, n_up),
-    )
-    plan.validate(timesteps, n_up)
-    return plan
+#: the CLI's stock phase-aware plan now lives with the serving stack
+#: (``repro.serving.frontend``) so the HTTP request factory and this CLI
+#: build identical plans; re-exported here for callers of the old name
+default_pas_plan = _serving_default_pas_plan
+
+
+def _check_shards_available(n_shards: int) -> None:
+    """Fail fast, with an actionable message, when the lane mesh cannot be
+    built — previously ``--cache cross --shards N`` on a short-device host
+    died deep inside mesh construction."""
+    avail = jax.device_count()
+    if n_shards > avail:
+        raise SystemExit(
+            f"--shards {n_shards} needs {n_shards} visible devices but only "
+            f"{avail} present; lower --shards or expose host devices, e.g. "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards}"
+        )
 
 
 def make_diffusion_requests(args, ucfg) -> list[GenRequest]:
@@ -122,18 +146,57 @@ def make_diffusion_requests(args, ucfg) -> list[GenRequest]:
     return reqs
 
 
-def serve_diffusion(args) -> dict:
+def _init_diffusion_models(args, *, decode_images: bool = True):
+    """Config + freshly initialized U-Net/VAE params per CLI args — the
+    ONE place the served model is constructed, so the static baseline and
+    the continuous engine always serve identical weights."""
     ucfg = get_unet_config(args.unet)
     dcfg = DiffusionConfig(timesteps_sample=args.timesteps)
-    key = jax.random.key(args.seed)
-    k1, k2 = jax.random.split(key)
+    k1, k2 = jax.random.split(jax.random.key(args.seed))
     params = U.init_unet(k1, ucfg)
-    vae_params = V.init_vae(k2, latent_channels=ucfg.in_channels)
+    vae_params = (
+        V.init_vae(k2, latent_channels=ucfg.in_channels) if decode_images else None
+    )
+    return ucfg, dcfg, params, vae_params
 
+
+def build_continuous_engine(args, *, decode_images: bool = True):
+    """The continuous (possibly sharded, possibly cache-armed) engine per
+    CLI args — shared by the batch path and the HTTP frontend.
+
+    Returns ``(engine, ucfg, dcfg, cfg)``.
+    """
+    ucfg, dcfg, params, vae_params = _init_diffusion_models(
+        args, decode_images=decode_images
+    )
     n_up = U.n_up_steps(ucfg)
-    reqs = make_diffusion_requests(args, ucfg)
-    engine_kind = getattr(args, "engine", "continuous")
+    n_shards = getattr(args, "shards", 1)
+    _check_shards_available(n_shards)
+    cache_mode = getattr(args, "cache", "off")
+    cfg = EngineConfig(
+        n_lanes=args.batch,
+        max_steps=args.timesteps,
+        l_sketch=min(3, n_up),
+        l_refine=min(2, n_up),
+        decode_images=decode_images,
+        cache_mode=cache_mode,
+        cache_slots=getattr(args, "cache_slots", 16),
+        cache_threshold=getattr(args, "cache_threshold", 0.15),
+        cache_t_bucket=getattr(args, "cache_bucket", 125),
+        n_shards=n_shards,
+    )
+    window = getattr(args, "window", 4)
+    scheduler = (
+        CacheAwareScheduler(window=window)
+        if cache_mode != "off"
+        else PlanAwareScheduler(window=window)
+    )
+    engine = make_serving_engine(ucfg, dcfg, params, vae_params, cfg, scheduler=scheduler)
+    return engine, ucfg, dcfg, cfg
 
+
+def serve_diffusion(args) -> dict:
+    engine_kind = getattr(args, "engine", "continuous")
     n_shards = getattr(args, "shards", 1)
     if engine_kind == "static":
         if getattr(args, "cache", "off") != "off":
@@ -146,30 +209,16 @@ def serve_diffusion(args) -> dict:
                 "--shards requires the continuous engine (lockstep batches have "
                 "no lane axis to shard); drop --engine static or --shards"
             )
+        ucfg, dcfg, params, vae_params = _init_diffusion_models(args)
+        n_up = U.n_up_steps(ucfg)
+        reqs = make_diffusion_requests(args, ucfg)
         plan_fn = (lambda t: default_pas_plan(t, n_up)) if args.pas else (lambda t: None)
         done, summary = serve_static(
             ucfg, dcfg, params, vae_params, reqs, args.batch, plan_fn=plan_fn
         )
     else:
-        cache_mode = getattr(args, "cache", "off")
-        cfg = EngineConfig(
-            n_lanes=args.batch,
-            max_steps=args.timesteps,
-            l_sketch=min(3, n_up),
-            l_refine=min(2, n_up),
-            cache_mode=cache_mode,
-            cache_slots=getattr(args, "cache_slots", 16),
-            cache_threshold=getattr(args, "cache_threshold", 0.15),
-            cache_t_bucket=getattr(args, "cache_bucket", 125),
-            n_shards=n_shards,
-        )
-        window = getattr(args, "window", 4)
-        scheduler = (
-            CacheAwareScheduler(window=window)
-            if cache_mode != "off"
-            else PlanAwareScheduler(window=window)
-        )
-        engine = make_serving_engine(ucfg, dcfg, params, vae_params, cfg, scheduler=scheduler)
+        engine, ucfg, _dcfg, _cfg = build_continuous_engine(args)
+        reqs = make_diffusion_requests(args, ucfg)
         done, summary = engine.run(reqs)
 
     assert sorted(r.rid for r in done) == list(range(args.requests))
@@ -180,6 +229,52 @@ def serve_diffusion(args) -> dict:
         pas=bool(args.pas),
         image_shape=tuple(done[0].image.shape),
     )
+
+
+# ---------------------------------------------------------------------------
+# HTTP serving: the async frontend over the engine driver
+# ---------------------------------------------------------------------------
+
+
+def _parse_hostport(value: str) -> tuple[str, int]:
+    host, _, port = value.rpartition(":")
+    try:
+        return host or "127.0.0.1", int(port)
+    except ValueError:
+        raise SystemExit(f"--http wants HOST:PORT (PORT 0 = ephemeral), got {value!r}")
+
+
+def serve_http(args) -> None:
+    """Run the async HTTP frontend until a graceful drain completes."""
+    if getattr(args, "engine", "continuous") == "static":
+        raise SystemExit(
+            "--http requires the continuous engine (the lockstep baseline has "
+            "no event loop to drive asynchronously); drop --engine static"
+        )
+    host, port = _parse_hostport(args.http)
+    engine, ucfg, dcfg, cfg = build_continuous_engine(args, decode_images=False)
+    driver = EngineDriver(engine, max_inflight=args.max_inflight)
+    factory = RequestFactory(ucfg, dcfg, cfg)
+
+    async def amain() -> dict:
+        driver.start()
+        frontend = HTTPFrontend(driver, factory, host, port)
+        await frontend.start()
+        print(f"[serve] http listening on {frontend.host}:{frontend.port}", flush=True)
+        if args.port_file:
+            tmp = args.port_file + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(str(frontend.port))
+            os.replace(tmp, args.port_file)  # atomic: clients never see a partial write
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            loop.add_signal_handler(sig, frontend.request_shutdown)
+        return await frontend.serve_until_shutdown()
+
+    summary = asyncio.run(amain())
+    print(f"[serve] drained {summary}")
+    if not summary.get("drained", False):
+        raise SystemExit("server stopped without a clean drain")
 
 
 # ---------------------------------------------------------------------------
@@ -289,11 +384,30 @@ def main() -> None:
         "--cache-bucket", type=int, default=125,
         help="timestep bucket width (train-timestep units) for cache keys",
     )
+    ap.add_argument(
+        "--http", metavar="HOST:PORT", default=None,
+        help="serve the continuous engine over an asyncio HTTP frontend "
+        "(PORT 0 = ephemeral) instead of running a synthetic batch; "
+        "drains gracefully on SIGINT/SIGTERM or POST /shutdown",
+    )
+    ap.add_argument(
+        "--port-file", default=None, metavar="PATH",
+        help="write the bound HTTP port here (atomically) once listening",
+    )
+    ap.add_argument(
+        "--max-inflight", type=int, default=32,
+        help="bounded admission depth of the HTTP frontend (429 beyond it)",
+    )
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.http is not None:
+        if args.mode != "diffusion":
+            raise SystemExit("--http currently serves --mode diffusion only")
+        serve_http(args)
+        return
     stats = serve_diffusion(args) if args.mode == "diffusion" else serve_lm(args)
     print(f"[serve] {stats}")
 

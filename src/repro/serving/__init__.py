@@ -8,6 +8,11 @@
   warm-shard routing)
 * ``engine``    — the continuous-batching event loop (single-device +
   mesh-sharded) + static baseline
+* ``driver``    — dedicated engine thread: thread-safe bounded submission,
+  per-request event streams, cancellation, graceful drain
+* ``frontend``  — asyncio HTTP server over the driver (chunked NDJSON
+  progress streaming, backpressure as 429)
+* ``client``    — async HTTP client + Poisson/closed-loop load generator
 * ``metrics``   — latency percentiles, throughput, lane occupancy/balance,
   hit rate
 """
@@ -19,6 +24,11 @@ from repro.serving.cache import (
     prompt_signature,
     signature_distance,
 )
+# NOTE: ``repro.serving.client`` is deliberately NOT imported here — it is
+# runnable as ``python -m repro.serving.client`` and importing it from the
+# package __init__ would make runpy warn about double execution.  Import
+# it explicitly: ``from repro.serving.client import FrontendClient``.
+from repro.serving.driver import EngineDriver, SubmitRejected, latent_digest
 from repro.serving.engine import (
     CompletedRequest,
     DiffusionEngine,
@@ -29,6 +39,7 @@ from repro.serving.engine import (
     make_serving_engine,
     serve_static,
 )
+from repro.serving.frontend import HTTPFrontend, RequestFactory, default_pas_plan
 from repro.serving.lanes import LaneState, ShardedLaneState, make_plan_arrays
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import (
@@ -43,17 +54,23 @@ __all__ = [
     "CompletedRequest",
     "DiffusionEngine",
     "EngineConfig",
+    "EngineDriver",
     "FIFOScheduler",
     "FeatureCache",
     "GenRequest",
+    "HTTPFrontend",
     "LaneState",
     "PlanAwareScheduler",
+    "RequestFactory",
     "ServingMetrics",
     "ShardedDiffusionEngine",
     "ShardedFeatureCache",
     "ShardedLaneState",
     "SlotRing",
     "StaticServer",
+    "SubmitRejected",
+    "default_pas_plan",
+    "latent_digest",
     "make_plan_arrays",
     "make_serving_engine",
     "prompt_signature",

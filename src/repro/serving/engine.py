@@ -215,6 +215,41 @@ class DiffusionEngine:
     def n_pending(self) -> int:
         return len(self.scheduler)
 
+    def progress(self) -> list[tuple[int, int, int]]:
+        """``(rid, completed steps, total steps)`` per in-flight lane."""
+        return [
+            (r.rid, int(self._lane_step[i]), r.timesteps)
+            for i, r in enumerate(self._lane_req)
+            if r is not None
+        ]
+
+    # -- cancellation -------------------------------------------------------
+
+    def cancel(self, rid: int) -> bool:
+        """Abort one request wherever it currently is.
+
+        A still-queued request is removed from the admission queue; an
+        in-flight request's lane is released immediately, so the next
+        :meth:`step`'s backfill can hand the lane to a queued request.
+        Returns ``False`` when the rid is unknown here (already completed,
+        never submitted, or cancelled before).  Like every other engine
+        method, this must run on the thread that owns the engine (the
+        driver thread under ``repro.serving.driver``).
+        """
+        if self.scheduler.remove(rid):
+            return True
+        for lane, req in enumerate(self._lane_req):
+            if req is not None and req.rid == rid:
+                self._release_lane(lane)
+                self._lane_req[lane] = None
+                self._stall[lane] = 0
+                return True
+        return False
+
+    def _release_lane(self, lane: int) -> None:
+        """Mark a lane empty on device (host mirrors are the caller's job)."""
+        self._state = LN.release(self._state, jnp.int32(lane))
+
     def _active_lanes(self) -> list[int]:
         return [i for i, r in enumerate(self._lane_req) if r is not None]
 
@@ -379,7 +414,7 @@ class DiffusionEngine:
                     completed_s=clock() if clock is not None else now_s,
                 )
             )
-            self._state = LN.release(self._state, jnp.int32(lane))
+            self._release_lane(lane)
             self._lane_req[lane] = None
             self.metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
         return done
@@ -536,6 +571,9 @@ class ShardedDiffusionEngine(DiffusionEngine):
 
     def _summary_extra(self) -> dict:
         return {"shards": self.n_shards, "lanes_per_shard": self.lanes_per_shard}
+
+    def _release_lane(self, lane: int) -> None:
+        self._state = self._release(self._state, jnp.int32(lane))
 
     # -- event loop -----------------------------------------------------------
 
@@ -715,7 +753,7 @@ class ShardedDiffusionEngine(DiffusionEngine):
                     completed_s=clock() if clock is not None else now_s,
                 )
             )
-            self._state = self._release(self._state, jnp.int32(lane))
+            self._release_lane(lane)
             self._lane_req[lane] = None
             self.metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
         return done

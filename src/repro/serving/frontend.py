@@ -1,0 +1,394 @@
+"""Asyncio HTTP frontend over the engine driver (stdlib only).
+
+A thin async layer that turns the single-threaded serving engines into a
+server real traffic can hit: requests arrive over HTTP, are materialized
+into :class:`~repro.serving.engine.GenRequest` s, and flow through the
+:class:`~repro.serving.driver.EngineDriver`'s thread-safe submission
+queue.  Per-step progress streams back as chunked NDJSON, cancellation is
+a separate endpoint (or just dropping the streaming connection), and
+backpressure surfaces as HTTP 429.
+
+Endpoints (HTTP/1.1, ``Connection: close``):
+
+``POST /generate``
+    JSON body ``{"prompt": str, "timesteps": int, "pas": bool,
+    "seed": int, "allow_cache": bool, "stream": bool}`` (all optional but
+    ``timesteps`` recommended).  With ``stream`` (the default) the
+    response is ``200`` chunked NDJSON — one JSON object per line:
+    ``{"event": "queued", ...}``, one ``{"event": "step", "step": k,
+    "n_steps": n}`` per advanced denoise step, then exactly one terminal
+    ``done`` (with ``latent_digest``, ``latency_s``, ``queue_wait_s``) /
+    ``cancelled`` / ``error``.  ``stream=false`` waits and returns just
+    the terminal object.  ``429`` when the driver is at capacity, ``503``
+    while draining, ``400`` on a malformed payload.
+``POST /cancel``
+    ``{"rid": int}`` → ``{"accepted": bool}``.  The ``cancelled`` event
+    is delivered on the request's own stream.
+``GET /healthz``
+    Liveness + occupancy snapshot (lock-free, approximate).
+``GET /stats``
+    Full serving-metrics summary, taken on the driver thread.
+``POST /shutdown``
+    Graceful drain: ``202`` immediately, then stop accepting, run every
+    in-flight request to a terminal event, flush the open streams, and
+    stop the server loop.
+
+Dropping a streaming connection mid-denoise cancels the request — a dead
+client must not keep burning lane-steps.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import itertools
+import json
+import threading
+from http import HTTPStatus
+from typing import Any
+
+import numpy as np
+
+from repro.common.types import PASPlan
+from repro.serving.driver import TERMINAL_EVENTS, EngineDriver, SubmitRejected
+
+_MAX_BODY = 1 << 20  # 1 MiB: generate payloads are tiny JSON
+
+
+def default_pas_plan(
+    timesteps: int, n_up: int, l_sketch: int | None = None, l_refine: int | None = None
+) -> PASPlan:
+    """The serving stack's stock phase-aware plan (same shape as the seed
+    server's, but valid down to ``timesteps=1`` so HTTP clients may ask
+    for arbitrarily short denoises); ``l_sketch`` / ``l_refine`` default
+    to the engine-standard ``min(3, n_up)`` / ``min(2, n_up)`` cache
+    geometry."""
+    t_sketch = max(1, timesteps // 2)
+    plan = PASPlan(
+        t_sketch=t_sketch,
+        t_complete=min(t_sketch, max(2, timesteps // 10)),
+        t_sparse=4,
+        l_sketch=min(3, n_up) if l_sketch is None else l_sketch,
+        l_refine=min(2, n_up) if l_refine is None else l_refine,
+    )
+    plan.validate(timesteps, n_up)
+    return plan
+
+
+class RequestFactory:
+    """Materializes HTTP payloads into :class:`GenRequest` s.
+
+    The prompt string is hashed into the rng stream that synthesizes the
+    prompt embedding, so equal ``(prompt, seed)`` payloads produce
+    bit-equal requests — which is what makes the streamed
+    ``latent_digest`` a deterministic function of the payload (cache off),
+    and what gives the cross-request feature cache real prompt locality
+    under repeated prompts.
+    """
+
+    def __init__(self, ucfg, dcfg, engine_config):
+        from repro.models import unet as U
+
+        self.ucfg, self.dcfg = ucfg, dcfg
+        self.max_steps = engine_config.max_steps
+        self.l_sketch = engine_config.l_sketch
+        self.l_refine = engine_config.l_refine
+        self.n_up = U.n_up_steps(ucfg)
+        self._rid = itertools.count()
+        self._lock = threading.Lock()
+
+    def make(self, payload: dict[str, Any]):
+        from repro.serving.engine import GenRequest
+
+        if not isinstance(payload, dict):
+            raise ValueError("payload must be a JSON object")
+        timesteps = int(payload.get("timesteps", self.max_steps))
+        if not 1 <= timesteps <= self.max_steps:
+            raise ValueError(
+                f"timesteps must be in [1, {self.max_steps}], got {timesteps}"
+            )
+        prompt = str(payload.get("prompt", ""))
+        seed = int(payload.get("seed", 0))
+        mix = int.from_bytes(hashlib.sha256(prompt.encode()).digest()[:8], "little")
+        rng = np.random.default_rng((seed, mix))
+        L = self.ucfg.latent_size**2
+        plan = None
+        if payload.get("pas"):
+            plan = default_pas_plan(timesteps, self.n_up, self.l_sketch, self.l_refine)
+        with self._lock:
+            rid = next(self._rid)
+        return GenRequest(
+            rid=rid,
+            ctx=rng.normal(size=(self.ucfg.ctx_len, self.ucfg.ctx_dim)).astype(np.float32) * 0.2,
+            noise=rng.normal(size=(L, self.ucfg.in_channels)).astype(np.float32),
+            timesteps=timesteps,
+            plan=plan,
+            allow_cache=bool(payload.get("allow_cache", True)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Minimal HTTP/1.1 plumbing (stdlib only — no aiohttp in the container)
+# ---------------------------------------------------------------------------
+
+
+async def read_http_request(reader: asyncio.StreamReader) -> tuple[str, str, dict, bytes]:
+    """Parse one request: (method, path, lowercase headers, body)."""
+    line = await reader.readline()
+    parts = line.decode("latin-1").split()
+    if len(parts) < 3:
+        raise ValueError(f"malformed request line: {line!r}")
+    method, path = parts[0].upper(), parts[1]
+    headers: dict[str, str] = {}
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode("latin-1").partition(":")
+        headers[k.strip().lower()] = v.strip()
+    n = int(headers.get("content-length", 0))
+    if n > _MAX_BODY:
+        raise ValueError(f"body too large ({n} bytes)")
+    body = await reader.readexactly(n) if n > 0 else b""
+    return method, path, headers, body
+
+
+def _status_line(status: int) -> bytes:
+    phrase = HTTPStatus(status).phrase
+    return f"HTTP/1.1 {status} {phrase}\r\n".encode()
+
+
+async def send_json(writer: asyncio.StreamWriter, status: int, payload: dict) -> None:
+    body = (json.dumps(payload) + "\n").encode()
+    writer.write(
+        _status_line(status)
+        + b"Content-Type: application/json\r\n"
+        + f"Content-Length: {len(body)}\r\n".encode()
+        + b"Connection: close\r\n\r\n"
+        + body
+    )
+    await writer.drain()
+
+
+async def start_chunked(writer: asyncio.StreamWriter, status: int = 200) -> None:
+    writer.write(
+        _status_line(status)
+        + b"Content-Type: application/x-ndjson\r\n"
+        + b"Transfer-Encoding: chunked\r\n"
+        + b"Connection: close\r\n\r\n"
+    )
+    await writer.drain()
+
+
+def chunk(data: bytes) -> bytes:
+    return f"{len(data):x}\r\n".encode() + data + b"\r\n"
+
+
+# ---------------------------------------------------------------------------
+# The frontend server
+# ---------------------------------------------------------------------------
+
+
+class HTTPFrontend:
+    """Asyncio HTTP server bridging client connections to the driver.
+
+    Driver events are emitted on the driver thread; each ``/generate``
+    handler installs a trampoline that ``call_soon_threadsafe``-forwards
+    them into a per-request ``asyncio.Queue``, so the event loop never
+    blocks on the engine and the engine never blocks on a slow client.
+    """
+
+    def __init__(
+        self,
+        driver: EngineDriver,
+        factory: RequestFactory,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        stream_flush_timeout_s: float = 30.0,
+    ):
+        self.driver = driver
+        self.factory = factory
+        self.host = host
+        self.port = port
+        #: drain grace for open streams to flush their terminal events; a
+        #: client that stopped reading must not wedge shutdown forever
+        self.stream_flush_timeout_s = stream_flush_timeout_s
+        self._server: asyncio.AbstractServer | None = None
+        self._stopped: asyncio.Event | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._n_streams = 0
+        self._streams_idle: asyncio.Event | None = None
+        self._shutdown_started = False
+        self.final_summary: dict | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "HTTPFrontend":
+        self._loop = asyncio.get_running_loop()
+        self._stopped = asyncio.Event()
+        self._streams_idle = asyncio.Event()
+        self._streams_idle.set()
+        # an engine crash must take the server down (summary carries the
+        # error and drained=False), not leave a zombie answering 503
+        self.driver.on_crash = lambda err: self.request_shutdown()
+        self._server = await asyncio.start_server(self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def serve_until_shutdown(self) -> dict:
+        """Serve until a drain finishes (``POST /shutdown`` or
+        :meth:`request_shutdown`); returns the driver's final summary."""
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._stopped.wait()
+        return self.final_summary or {}
+
+    def request_shutdown(self) -> None:
+        """Signal-handler-safe entry into the graceful drain."""
+        if self._loop is not None:
+            self._loop.call_soon_threadsafe(
+                lambda: self._loop.create_task(self._drain_and_stop())
+            )
+
+    async def _drain_and_stop(self) -> None:
+        if self._shutdown_started:
+            return
+        self._shutdown_started = True
+        loop = asyncio.get_running_loop()
+        # drain on the default executor: shutdown() blocks on the driver
+        # thread finishing every in-flight request
+        self.final_summary = await loop.run_in_executor(None, self.driver.shutdown)
+        # every terminal event is now queued on the loop; let the open
+        # streaming handlers flush them to their sockets before stopping —
+        # bounded, so a stalled reader (full TCP window, frozen client)
+        # cannot wedge the drain: past the grace its handler dies with the
+        # loop, which is the same outcome the client forced anyway
+        try:
+            await asyncio.wait_for(
+                self._streams_idle.wait(), timeout=self.stream_flush_timeout_s
+            )
+        except asyncio.TimeoutError:
+            pass
+        self._stopped.set()
+
+    # -- connection handling ---------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter) -> None:
+        try:
+            try:
+                method, path, _headers, body = await read_http_request(reader)
+            except (ValueError, asyncio.IncompleteReadError, ConnectionError):
+                return
+            try:
+                payload = json.loads(body) if body else {}
+            except json.JSONDecodeError:
+                return await send_json(writer, 400, {"error": "body is not valid JSON"})
+
+            if method == "GET" and path == "/healthz":
+                await self._handle_health(writer)
+            elif method == "GET" and path == "/stats":
+                await self._handle_stats(writer)
+            elif method == "POST" and path == "/generate":
+                await self._handle_generate(writer, payload)
+            elif method == "POST" and path == "/cancel":
+                await self._handle_cancel(writer, payload)
+            elif method == "POST" and path == "/shutdown":
+                await send_json(writer, 202, {"draining": True})
+                asyncio.get_running_loop().create_task(self._drain_and_stop())
+            else:
+                await send_json(writer, 404, {"error": f"no route {method} {path}"})
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _handle_health(self, writer: asyncio.StreamWriter) -> None:
+        eng = self.driver.engine
+        await send_json(writer, 200, {
+            "status": "draining" if self.driver.draining else "ok",
+            "active": eng.n_active,
+            "pending": eng.n_pending,
+            "open": self.driver.open_requests,
+            "max_inflight": self.driver.max_inflight,
+            "lanes": eng.config.n_lanes,
+            "shards": eng.config.n_shards,
+            "mode": eng._mode_name,
+        })
+
+    async def _handle_stats(self, writer: asyncio.StreamWriter) -> None:
+        loop = asyncio.get_running_loop()
+        try:
+            summary = await loop.run_in_executor(None, self.driver.stats)
+        except TimeoutError:
+            # the probe is pumped between micro-steps; a first-request jit
+            # compile can outlast it — that's busy, not broken
+            return await send_json(
+                writer, 503, {"error": "stats probe timed out (engine busy)"}
+            )
+        await send_json(writer, 200, summary)
+
+    async def _handle_cancel(self, writer: asyncio.StreamWriter, payload: dict) -> None:
+        try:
+            rid = int(payload["rid"])
+        except (KeyError, TypeError, ValueError):
+            return await send_json(writer, 400, {"error": "body must carry an int rid"})
+        accepted = self.driver.cancel(rid)
+        await send_json(writer, 200, {"accepted": accepted, "rid": rid})
+
+    async def _handle_generate(self, writer: asyncio.StreamWriter, payload: dict) -> None:
+        try:
+            req = self.factory.make(payload)
+        except (ValueError, TypeError) as e:
+            return await send_json(writer, 400, {"error": str(e)})
+
+        loop = asyncio.get_running_loop()
+        events: asyncio.Queue = asyncio.Queue()
+
+        def on_event(ev: dict) -> None:  # driver thread -> event loop
+            loop.call_soon_threadsafe(events.put_nowait, ev)
+
+        try:
+            self.driver.submit(req, on_event)
+        except SubmitRejected as e:
+            status = 503 if self.driver.draining else 429
+            return await send_json(writer, status, {"error": str(e)})
+
+        # both branches count as open streams so a drain never stops the
+        # server loop before the terminal response reached the socket
+        self._n_streams += 1
+        self._streams_idle.clear()
+        if not payload.get("stream", True):
+            try:
+                while True:
+                    ev = await events.get()
+                    if ev["event"] in TERMINAL_EVENTS:
+                        return await send_json(writer, 200, ev)
+            finally:
+                self._n_streams -= 1
+                if self._n_streams == 0:
+                    self._streams_idle.set()
+
+        try:
+            await start_chunked(writer)
+            while True:
+                ev = await events.get()
+                try:
+                    writer.write(chunk((json.dumps(ev) + "\n").encode()))
+                    await writer.drain()
+                except (ConnectionError, OSError):
+                    # client went away mid-denoise: stop burning lane-steps
+                    self.driver.cancel(req.rid)
+                    return
+                if ev["event"] in TERMINAL_EVENTS:
+                    break
+            writer.write(b"0\r\n\r\n")
+            await writer.drain()
+        except (ConnectionError, OSError):
+            self.driver.cancel(req.rid)
+        finally:
+            self._n_streams -= 1
+            if self._n_streams == 0:
+                self._streams_idle.set()

@@ -34,6 +34,19 @@ class FIFOScheduler:
     def add(self, request) -> None:
         self._queue.append(request)
 
+    def remove(self, rid: int) -> bool:
+        """Drop a queued request by rid (cancellation before admission).
+
+        Removal preserves the relative order of the survivors, so FIFO
+        (and FIFO-within-identical-plan under the windowed schedulers)
+        still holds over the requests that remain.
+        """
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                return True
+        return False
+
     def __len__(self) -> int:
         return len(self._queue)
 

@@ -1,0 +1,354 @@
+"""Async HTTP frontend + engine driver: backpressure, cancellation,
+graceful drain, and the live-server event protocol.
+
+The module-scoped engine keeps jit compilation to one U-Net; the driver
+tests exploit that :class:`EngineDriver` can be constructed without
+starting its thread, which makes backpressure and cancel ordering
+deterministic (messages queue in the inbox until ``start()``).
+"""
+import asyncio
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.types import DiffusionConfig
+from repro.configs import get_unet_config
+from repro.models import unet as U
+from repro.serving import (
+    DiffusionEngine,
+    EngineConfig,
+    EngineDriver,
+    GenRequest,
+    HTTPFrontend,
+    PlanAwareScheduler,
+    RequestFactory,
+    SubmitRejected,
+    default_pas_plan,
+)
+from repro.serving.client import FrontendClient, RequestRejected, run_load
+
+TOY = get_unet_config("sd_toy")
+N_UP = U.n_up_steps(TOY)
+L = TOY.latent_size**2
+DCFG = DiffusionConfig(timesteps_sample=6)
+CFG = EngineConfig(
+    n_lanes=2, max_steps=6, l_sketch=min(3, N_UP), l_refine=min(2, N_UP),
+    decode_images=False,
+)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def engine():
+    params = U.init_unet(jax.random.key(0), TOY)
+    eng = DiffusionEngine(
+        TOY, DCFG, params, None, CFG, scheduler=PlanAwareScheduler(window=2)
+    )
+    return eng
+
+
+def _request(rid, t, pas=False, seed=None):
+    rng = np.random.default_rng(100 + (seed if seed is not None else rid))
+    return GenRequest(
+        rid=rid,
+        ctx=rng.normal(size=(TOY.ctx_len, TOY.ctx_dim)).astype(np.float32) * 0.2,
+        noise=rng.normal(size=(L, TOY.in_channels)).astype(np.float32),
+        timesteps=t,
+        plan=default_pas_plan(t, N_UP) if pas else None,
+    )
+
+
+class _Collector:
+    """Thread-safe event sink with per-rid terminal latches."""
+
+    def __init__(self):
+        self.events: list[dict] = []
+        self._lock = threading.Lock()
+        self._terminal: dict[int, threading.Event] = {}
+
+    def sink(self, rid: int):
+        with self._lock:
+            self._terminal.setdefault(rid, threading.Event())
+
+        def on_event(ev):
+            with self._lock:
+                self.events.append(ev)
+            if ev["event"] in ("done", "cancelled", "error"):
+                self._terminal[ev["rid"]].set()
+
+        return on_event
+
+    def wait(self, rid: int, timeout=120.0):
+        assert self._terminal[rid].wait(timeout), f"rid {rid} never reached terminal"
+
+    def of(self, rid: int) -> list[dict]:
+        with self._lock:
+            return [e for e in self.events if e.get("rid") == rid]
+
+
+# ---------------------------------------------------------------------------
+# Driver: backpressure, drain, cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_driver_backpressure_bounded_queue(engine):
+    driver = EngineDriver(engine, max_inflight=2)  # not started: fully deterministic
+    col = _Collector()
+    driver.submit(_request(0, 3), col.sink(0))
+    driver.submit(_request(1, 3), col.sink(1))
+    with pytest.raises(SubmitRejected):
+        driver.submit(_request(2, 3), col.sink(2))
+    assert driver.n_rejected == 1
+    driver.start()
+    col.wait(0)
+    col.wait(1)
+    # capacity freed by completion: submissions flow again
+    driver.submit(_request(3, 3), col.sink(3))
+    col.wait(3)
+    summary = driver.shutdown()
+    assert summary["completed"] == 3 and summary["drained"]
+
+
+def test_driver_graceful_drain_and_reject_after(engine):
+    driver = EngineDriver(engine, max_inflight=8)
+    col = _Collector()
+    for rid in range(4):
+        driver.submit(_request(rid, 3 + rid % 2, pas=rid % 2 == 0), col.sink(rid))
+    driver.start()
+    summary = driver.shutdown()  # drain: everything accepted must finish
+    assert summary["completed"] == 4
+    assert summary["drained"] and summary["open"] == 0
+    assert engine.n_active == 0 and engine.n_pending == 0
+    with pytest.raises(SubmitRejected):
+        driver.submit(_request(99, 3))
+    assert driver.shutdown() == summary  # idempotent
+
+
+def test_driver_event_protocol_and_digest_determinism(engine):
+    digests = []
+    for _ in range(2):
+        driver = EngineDriver(engine, max_inflight=4)
+        col = _Collector()
+        driver.submit(_request(0, 4, pas=True, seed=7), col.sink(0))
+        driver.start()
+        col.wait(0)
+        driver.shutdown()
+        evs = col.of(0)
+        kinds = [e["event"] for e in evs]
+        assert kinds[0] == "queued" and kinds[-1] == "done"
+        steps = [e["step"] for e in evs if e["event"] == "step"]
+        assert steps == list(range(1, 5))  # one event per advanced step, 1..t
+        assert evs[-1]["steps"] == 4 and evs[-1]["latency_s"] > 0
+        digests.append(evs[-1]["latent_digest"])
+    assert digests[0] == digests[1], "same request must stream the same digest"
+
+
+def test_driver_cancel_frees_lane_for_backfill(engine):
+    """2 lanes, 3 requests: cancelling an in-lane request mid-denoise must
+    retire its lane and let the queued request backfill it."""
+    driver = EngineDriver(engine, max_inflight=8)
+    col = _Collector()
+    stepped = threading.Event()
+
+    def sink0(base):
+        def on_event(ev):
+            if ev["event"] == "step":
+                stepped.set()
+            base(ev)
+        return on_event
+
+    driver.submit(_request(0, 6), sink0(col.sink(0)))
+    driver.submit(_request(1, 6), col.sink(1))
+    driver.submit(_request(2, 3), col.sink(2))  # waits for a lane
+    driver.start()
+    assert stepped.wait(120), "rid 0 never advanced"
+    assert driver.cancel(0)
+    col.wait(0)
+    term0 = col.of(0)[-1]
+    assert term0["event"] == "cancelled"
+    assert term0["where"] == "lane" and term0["at_step"] >= 1
+    col.wait(1)
+    col.wait(2)  # only reachable if rid 0's lane was backfilled
+    summary = driver.shutdown()
+    assert summary["completed"] == 2 and summary["cancelled"] == 1
+    assert summary["drained"] and engine.n_active == 0
+
+
+def test_driver_cancel_queued_request(engine):
+    driver = EngineDriver(engine, max_inflight=8)
+    col = _Collector()
+    for rid in range(3):
+        driver.submit(_request(rid, 3), col.sink(rid))
+    assert driver.cancel(2)  # still in the inbox/queue: no lane ever touched
+    driver.start()
+    col.wait(2)
+    assert col.of(2)[-1]["event"] == "cancelled"
+    assert col.of(2)[-1]["where"] == "queue"
+    summary = driver.shutdown()
+    assert summary["completed"] == 2 and summary["cancelled"] == 1
+    assert not driver.cancel(2)  # unknown rid now
+
+
+# ---------------------------------------------------------------------------
+# HTTP end-to-end (in-process server; mirrors the CI live-server smoke)
+# ---------------------------------------------------------------------------
+
+
+def _factory():
+    return RequestFactory(TOY, DCFG, CFG)
+
+
+def test_http_end_to_end_mixed_cancel_drain(engine):
+    async def scenario():
+        driver = EngineDriver(engine, max_inflight=8).start()
+        frontend = HTTPFrontend(driver, _factory(), "127.0.0.1", 0)
+        await frontend.start()
+        serve_task = asyncio.create_task(frontend.serve_until_shutdown())
+        client = FrontendClient("127.0.0.1", frontend.port)
+
+        health = await client.health()
+        assert health["status"] == "ok" and health["lanes"] == 2
+
+        stats = await run_load(
+            client, requests=5, mode="closed", concurrency=3,
+            t_lo=3, t_hi=6, plan_mode="mixed", cancel=1, seed=0,
+        )
+        assert stats.completed == 4 and stats.cancelled == 1 and stats.failed == 0
+        assert stats.cancel_ack_s and stats.cancel_ack_s[0] < 30.0
+
+        served = await client.stats()
+        assert served["completed"] == 4 and served["cancelled"] == 1
+
+        await client.shutdown()
+        summary = await serve_task
+        assert summary["drained"] and summary["open"] == 0
+        return stats
+
+    asyncio.run(scenario())
+    assert engine.n_active == 0 and engine.n_pending == 0
+
+
+def test_http_backpressure_429_and_bad_payload(engine):
+    async def scenario():
+        driver = EngineDriver(engine, max_inflight=1)  # NOT started: requests stay open
+        frontend = HTTPFrontend(driver, _factory(), "127.0.0.1", 0)
+        await frontend.start()
+        serve_task = asyncio.create_task(frontend.serve_until_shutdown())
+        client = FrontendClient("127.0.0.1", frontend.port)
+
+        first = asyncio.create_task(client.generate(timesteps=3))
+        # wait until the first submission occupies the only slot
+        for _ in range(100):
+            if (await client.health())["open"] == 1:
+                break
+            await asyncio.sleep(0.02)
+        with pytest.raises(RequestRejected) as exc:
+            await client.generate(timesteps=3)
+        assert exc.value.status == 429
+
+        with pytest.raises(RequestRejected) as exc:
+            await client.generate(timesteps=999)  # > max_steps
+        assert exc.value.status == 400
+
+        driver.start()
+        done = await first
+        assert done["event"] == "done" and done["latent_digest"]
+        await client.shutdown()
+        summary = await serve_task
+        assert summary["drained"] and summary["rejected"] == 1
+
+    asyncio.run(scenario())
+
+
+def test_request_factory_validation_and_determinism():
+    f = _factory()
+    r1 = f.make({"prompt": "p", "seed": 1, "timesteps": 4, "pas": True})
+    r2 = f.make({"prompt": "p", "seed": 1, "timesteps": 4, "pas": True})
+    assert r1.rid != r2.rid  # rids are unique...
+    np.testing.assert_array_equal(r1.ctx, r2.ctx)  # ...but payload -> tensors is pure
+    np.testing.assert_array_equal(r1.noise, r2.noise)
+    r3 = f.make({"prompt": "q", "seed": 1, "timesteps": 4})
+    assert not np.array_equal(r1.ctx, r3.ctx)  # prompt feeds the rng stream
+    assert r3.plan is None and r1.plan is not None
+    with pytest.raises(ValueError):
+        f.make({"timesteps": 0})
+    with pytest.raises(ValueError):
+        f.make({"timesteps": CFG.max_steps + 1})
+
+
+def test_default_pas_plan_valid_at_tiny_step_counts():
+    for t in range(1, 9):
+        plan = default_pas_plan(t, N_UP)  # validate() raises on a bad plan
+        assert 0 < plan.t_complete <= plan.t_sketch <= t
+
+
+# ---------------------------------------------------------------------------
+# CLI (slow: subprocess servers pay a fresh jit each)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_cli_rejects_unavailable_shards():
+    """--shards beyond the visible device count must die fast with an
+    actionable message, not deep inside mesh construction (incl. the
+    --cache cross path that used to)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--mode", "diffusion",
+         "--requests", "2", "--batch", "8", "--timesteps", "4",
+         "--shards", "8", "--cache", "cross"],
+        capture_output=True, text=True, timeout=300, env=env, cwd=REPO,
+    )
+    assert out.returncode != 0
+    assert "--shards 8 needs 8 visible devices" in out.stderr
+    assert "xla_force_host_platform_device_count" in out.stderr
+
+
+def test_serve_cli_http_rejects_static_engine():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--mode", "diffusion",
+         "--http", "127.0.0.1:0", "--engine", "static"],
+        capture_output=True, text=True, timeout=300, env=env, cwd=REPO,
+    )
+    assert out.returncode != 0
+    assert "--http requires the continuous engine" in out.stderr
+
+
+@pytest.mark.slow
+def test_serve_cli_http_live_server_smoke(tmp_path):
+    """The CI frontend-smoke flow, end to end: real server process, real
+    client process, one mid-flight cancel, drain via POST /shutdown, and
+    the server exiting 0 only on a clean drain."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    port_file = str(tmp_path / "port.txt")
+    server = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--mode", "diffusion",
+         "--batch", "2", "--timesteps", "6", "--http", "127.0.0.1:0",
+         "--port-file", port_file],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env, cwd=REPO,
+    )
+    try:
+        client = subprocess.run(
+            [sys.executable, "-m", "repro.serving.client",
+             "--port-file", port_file, "--requests", "4", "--mode", "closed",
+             "--concurrency", "2", "--t-lo", "3", "--t-hi", "6",
+             "--mixed-plans", "--cancel", "1", "--shutdown"],
+            capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+        )
+        assert client.returncode == 0, client.stderr[-2000:] + client.stdout[-2000:]
+        out, err = server.communicate(timeout=120)
+        assert server.returncode == 0, err[-2000:]
+        assert "'drained': True" in out
+    finally:
+        if server.poll() is None:
+            server.kill()

@@ -217,3 +217,192 @@ def test_fuzz_plan_aware_head_admission_is_bounded(window, aligned, n_competitor
             break
     assert 0 in admitted
     assert admitted.index(0) <= s.max_head_skips
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle traces: submits / cancels / drain interleaved with micro-steps
+# (mirrors the HTTP frontend's driver: EngineDriver.submit/cancel/shutdown)
+# ---------------------------------------------------------------------------
+
+
+class _LifecycleSim:
+    """Host-only mirror of the *driver's* control flow over the engine.
+
+    Operations arrive as a trace of ``("submit", plan)``, ``("step",)``
+    and ``("cancel", k)`` tuples (``k`` counts into the submission order);
+    the run ends with a drain — step until every open request reaches a
+    terminal state.  Cancellation uses the real ``scheduler.remove`` for
+    queued requests and frees the lane for in-flight ones, exactly like
+    ``DiffusionEngine.cancel``.
+    """
+
+    def __init__(self, scheduler, n_lanes: int):
+        self.s = scheduler
+        self.n_lanes = n_lanes
+        self.lane_req = [None] * n_lanes
+        self.lane_step = [0] * n_lanes
+        self.stall = np.zeros(n_lanes, np.int64)
+        self.reqs: list[_FakeReq] = []
+        self.admitted: list[int] = []
+        self.retired: list[int] = []
+        self.cancelled: list[int] = []
+
+    # -- driver operations ---------------------------------------------------
+
+    def submit(self, plan) -> None:
+        req = _FakeReq(len(self.reqs), plan)
+        self.reqs.append(req)
+        self.s.add(req)
+
+    def cancel(self, rid: int) -> None:
+        if rid in self.retired or rid in self.cancelled:
+            return  # already terminal: driver ignores the control message
+        if self.s.remove(rid):
+            self.cancelled.append(rid)
+            return
+        for lane in range(self.n_lanes):
+            if self.lane_req[lane] is not None and self.lane_req[lane].rid == rid:
+                self.lane_req[lane] = None  # release: lane free for backfill
+                self.stall[lane] = 0
+                self.cancelled.append(rid)
+                return
+
+    def _backfill(self):
+        for lane in range(self.n_lanes):
+            if self.lane_req[lane] is not None:
+                continue
+            req = self.s.next_request([
+                r.branches[self.lane_step[i]:]
+                for i, r in enumerate(self.lane_req)
+                if r is not None
+            ])
+            if req is None:
+                return
+            assert req.rid not in self.admitted, f"rid {req.rid} admitted twice"
+            assert req.rid not in self.cancelled, "admitted a cancelled request"
+            self.admitted.append(req.rid)
+            self.lane_req[lane] = req
+            self.lane_step[lane] = 0
+            self.stall[lane] = 0
+
+    def step(self):
+        self._backfill()
+        active = [i for i in range(self.n_lanes) if self.lane_req[i] is not None]
+        if not active:
+            return
+        classes = np.array(
+            [self.lane_req[i].branches[self.lane_step[i]] for i in active], np.int64
+        )
+        b = self.s.pick_branch(classes, self.stall[active])
+        self.stall[active] += 1
+        for k, lane in enumerate(active):
+            if classes[k] != b:
+                continue
+            self.stall[lane] = 0
+            self.lane_step[lane] += 1
+            req = self.lane_req[lane]
+            if self.lane_step[lane] >= len(req.branches):
+                self.retired.append(req.rid)
+                self.lane_req[lane] = None
+
+    def open_rids(self) -> list[int]:
+        terminal = set(self.retired) | set(self.cancelled)
+        return [r.rid for r in self.reqs if r.rid not in terminal]
+
+    def drain(self, bound: int) -> None:
+        steps = 0
+        while self.open_rids():
+            steps += 1
+            assert steps <= bound, "drain made no progress (lane leak?)"
+            self.step()
+
+
+def _run_lifecycle_trace(kind: str, window: int, n_lanes: int, ops: list[tuple]):
+    """Execute a trace and assert the serving lifecycle invariants."""
+    sim = _LifecycleSim(_make_scheduler(kind, window), n_lanes)
+    for op in ops:
+        if op[0] == "submit":
+            sim.submit(op[1])
+        elif op[0] == "step":
+            sim.step()
+        elif op[0] == "cancel" and sim.reqs:
+            sim.cancel(op[1] % len(sim.reqs))
+    total = sum(len(r.branches) for r in sim.reqs) + 1
+    sim.drain(bound=total * (sim.s.patience + 1) + len(sim.reqs) + 1)
+
+    # -- no lane leak: drain leaves nothing behind ---------------------------
+    assert all(r is None for r in sim.lane_req), "drained with an occupied lane"
+    assert len(sim.s) == 0, "drained with queued requests"
+
+    # -- exactly-once terminal state per request -----------------------------
+    terminal = sorted(sim.retired + sim.cancelled)
+    assert terminal == list(range(len(sim.reqs))), "a request leaked or doubled"
+    assert not (set(sim.retired) & set(sim.cancelled))
+
+    # -- cancelled-before-admission requests never touched a lane ------------
+    for rid in sim.cancelled:
+        if rid not in sim.admitted:
+            assert all(
+                (r is None or r.rid != rid) for r in sim.lane_req
+            )
+
+    # -- FIFO within identical plans: among requests whose branch plans are
+    # byte-equal, admission preserves submission order (windowed scoring can
+    # reorder *different* plans only; removal by cancel keeps the rest stable)
+    order = {rid: i for i, rid in enumerate(sim.admitted)}
+    by_plan: dict[bytes, list[int]] = {}
+    for r in sim.reqs:
+        if r.rid in order:
+            by_plan.setdefault(r.branches.tobytes(), []).append(r.rid)
+    for rids in by_plan.values():
+        pos = [order[rid] for rid in rids]  # rids ascend in submission order
+        assert pos == sorted(pos), f"FIFO-within-plan violated: {rids} admitted at {pos}"
+
+
+LIFECYCLE_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.lists(st.integers(0, 2), min_size=1, max_size=6)),
+        st.tuples(st.just("step")),
+        st.tuples(st.just("cancel"), st.integers(0, 30)),
+    ),
+    min_size=0,
+    max_size=40,
+)
+
+
+@pytest.mark.parametrize("kind", SCHEDULERS)
+@pytest.mark.parametrize("seed", range(6))
+def test_lifecycle_trace_invariants_seeded(kind, seed):
+    rng = np.random.default_rng(5000 * seed + 13)
+    ops = []
+    for _ in range(int(rng.integers(4, 36))):
+        roll = rng.random()
+        if roll < 0.45:
+            ops.append(("submit", rng.integers(0, 3, size=int(rng.integers(1, 7))).tolist()))
+        elif roll < 0.8:
+            ops.append(("step",))
+        else:
+            ops.append(("cancel", int(rng.integers(0, 30))))
+    _run_lifecycle_trace(kind, int(rng.integers(1, 5)), int(rng.integers(1, 4)), ops)
+
+
+def test_lifecycle_cancel_in_lane_frees_it_for_backfill():
+    """1 lane, 2 requests: cancelling the in-flight one mid-denoise must
+    hand the lane to the queued one (the driver/backfill contract)."""
+    for kind in SCHEDULERS:
+        sim = _LifecycleSim(_make_scheduler(kind, 2), 1)
+        sim.submit([0, 0, 0, 0])
+        sim.submit([0, 0])
+        sim.step()  # admits rid 0, advances it
+        assert sim.lane_req[0].rid == 0
+        sim.cancel(0)
+        assert sim.lane_req[0] is None
+        sim.drain(bound=64)
+        assert sim.retired == [1] and sim.cancelled == [0]
+
+
+@given(kind=st.sampled_from(SCHEDULERS), window=st.integers(1, 5),
+       n_lanes=st.integers(1, 4), ops=LIFECYCLE_OPS)
+@settings(max_examples=120, deadline=None)
+def test_fuzz_lifecycle_trace_invariants(kind, window, n_lanes, ops):
+    _run_lifecycle_trace(kind, window, n_lanes, list(ops))

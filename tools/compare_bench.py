@@ -1,14 +1,16 @@
-"""Benchmark-trajectory regression gate.
+"""Benchmark-trajectory regression gate (multi-bench).
 
-Compares a freshly produced ``BENCH_serving.json`` (see
-``benchmarks/bench_serving.py --json``) against the checked-in baseline
-under ``benchmarks/baselines/``.  Every metric in the baseline's
-``gates`` section must come out no more than ``--rel-tol`` (default 15%)
-below its baseline value — gated metrics are ratios (speedups, FULL-step
-reduction, occupancy balance), which are portable across machines of
-different absolute speeds, so a regression here means the *code* got
-worse, not the runner.  Improvements always pass; absolute throughput
-and latency ride along in ``headline`` for trend inspection only.
+Compares freshly produced bench JSONs (``benchmarks/bench_serving.py
+--json``, ``benchmarks/bench_frontend.py --json``, ...) against the
+checked-in baselines under ``benchmarks/baselines/`` — each current file
+is paired with the baseline of the same basename.  Every metric in a
+baseline's ``gates`` section must come out no more than ``--rel-tol``
+(default 15%) below its baseline value — gated metrics are ratios
+(speedups, FULL-step reduction, occupancy, completion), which are
+portable across machines of different absolute speeds, so a regression
+here means the *code* got worse, not the runner.  Improvements always
+pass; absolute throughput and latency ride along in ``headline`` for
+trend inspection only.
 
 Baseline convention: the checked-in ``gates`` values are *conservative
 floors* — the low end of repeated baseline runs — not single-run point
@@ -18,61 +20,84 @@ performance envelope, regenerate the baseline run, then set each gate to
 the low end of a few repeats (see the baseline's ``note`` field).
 
 Usage:
-  python tools/compare_bench.py BENCH_serving.json benchmarks/baselines/BENCH_serving.json
+  python tools/compare_bench.py BENCH_serving.json BENCH_frontend.json
+  python tools/compare_bench.py BENCH_serving.json --baseline path/to/base.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
-def compare(current: dict, baseline: dict, rel_tol: float) -> list[str]:
+def compare(current: dict, baseline: dict, rel_tol: float, label: str = "") -> list[str]:
     """Return a list of failure messages (empty = pass)."""
+    tag = f"[compare_bench]{f' {label}' if label else ''}"
     failures = []
     base_gates = baseline.get("gates", {})
     cur_gates = current.get("gates", {})
     if not base_gates:
-        failures.append("baseline has no gated metrics — regenerate it with --json")
+        failures.append(f"{label}: baseline has no gated metrics — regenerate it with --json")
     for key, base_val in base_gates.items():
         if key not in cur_gates:
-            failures.append(f"{key}: missing from current run (baseline {base_val})")
+            failures.append(f"{label}/{key}: missing from current run (baseline {base_val})")
             continue
         cur_val = cur_gates[key]
         floor = base_val * (1.0 - rel_tol)
         status = "OK" if cur_val >= floor else "REGRESSION"
-        print(
-            f"[compare_bench] {key}: current={cur_val} baseline={base_val} "
-            f"floor={floor:.3f} -> {status}"
-        )
+        print(f"{tag} {key}: current={cur_val} baseline={base_val} floor={floor:.3f} -> {status}")
         if cur_val < floor:
             failures.append(
-                f"{key}: {cur_val} fell >{rel_tol:.0%} below baseline {base_val}"
+                f"{label}/{key}: {cur_val} fell >{rel_tol:.0%} below baseline {base_val}"
             )
     for key, val in current.get("headline", {}).items():
-        print(f"[compare_bench] headline {key}: {val}")
+        print(f"{tag} headline {key}: {val}")
     return failures
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="BENCH_serving.json from this run")
-    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument(
+        "current", nargs="+",
+        help="bench JSONs from this run (each is gated against the baseline "
+        "of the same basename under --baseline-dir)",
+    )
+    ap.add_argument(
+        "--baseline-dir", default="benchmarks/baselines",
+        help="directory of checked-in baseline JSONs (matched by basename)",
+    )
+    ap.add_argument(
+        "--baseline", default=None,
+        help="explicit baseline file (single current file only)",
+    )
     ap.add_argument(
         "--rel-tol", type=float, default=0.15,
         help="allowed relative shortfall vs baseline before failing (default 0.15)",
     )
     args = ap.parse_args()
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    failures = compare(current, baseline, args.rel_tol)
+    if args.baseline is not None and len(args.current) != 1:
+        ap.error("--baseline pairs with exactly one current file")
+
+    failures: list[str] = []
+    for cur_path in args.current:
+        base_path = args.baseline or os.path.join(
+            args.baseline_dir, os.path.basename(cur_path)
+        )
+        label = os.path.basename(cur_path)
+        if not os.path.exists(base_path):
+            failures.append(f"{label}: no checked-in baseline at {base_path}")
+            continue
+        with open(cur_path) as f:
+            current = json.load(f)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        failures.extend(compare(current, baseline, args.rel_tol, label=label))
     if failures:
         for msg in failures:
             print(f"[compare_bench] FAIL: {msg}", file=sys.stderr)
         return 1
-    print("[compare_bench] all gated metrics within tolerance")
+    print(f"[compare_bench] all gated metrics within tolerance ({len(args.current)} bench file(s))")
     return 0
 
 

@@ -1,0 +1,234 @@
+"""Quality-policy benchmark: FULL-step reduction and goodput vs quality tier.
+
+One pooled-prompt request stream served repeatedly through the cache-armed
+continuous engine, once per quality tier (every request resolved at that
+tier by :class:`repro.serving.policy.QualityPolicy`) and once as the
+mixed-tier stream (tiers rotating per request — the serving workload the
+per-request knob exists for).
+
+Headline acceptance: executed FULL U-Net lane-steps must fall
+*monotonically* with the tier — ``draft`` > ``balanced`` > ``high`` >
+``exact`` FULL-step reduction, with ``exact`` exactly 0 (all-FULL plan,
+threshold 0 never hits by the strict inequality).  The mixed stream's
+closed-loop goodput is gated as a *no-collapse* ratio against the
+all-``exact`` baseline (a mixed-tier stream fragments the branch classes,
+trading some micro-step packing efficiency for its FULL-step savings, so
+on narrow toy hardware the ratio sits below 1 — see the baseline's note).
+Per-tier runs are closed-loop (everything queued up front) so the
+reductions are a deterministic function of the stream, not of arrival
+timing; the mixed run also replays Poisson arrivals for latency numbers.
+
+``--json PATH`` writes ``BENCH_policy.json`` in the ``BENCH_serving.json``
+shape: ratio ``gates`` for ``tools/compare_bench.py`` plus absolute
+``headline`` numbers.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_policy.py
+  PYTHONPATH=src:. python benchmarks/bench_policy.py --smoke --json BENCH_policy.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.common.types import DiffusionConfig
+from repro.configs import get_unet_config
+from repro.models import unet as U
+from repro.serving import (
+    CacheAwareScheduler,
+    DiffusionEngine,
+    EngineConfig,
+    GenRequest,
+    QualityPolicy,
+)
+
+TIERS = ("draft", "balanced", "high", "exact")
+
+
+def make_stream(
+    ucfg,
+    policy: QualityPolicy,
+    n_requests: int,
+    rate_req_s: float,
+    t_lo: int,
+    t_hi: int,
+    seed: int,
+    *,
+    quality,
+    prompt_pool: int,
+    prompt_jitter: float,
+) -> list[GenRequest]:
+    """Poisson arrivals over a pooled-prompt workload; ``quality`` is a
+    fixed tier for every request or ``"mix"`` to rotate the tiers.  The
+    stream geometry (prompts, noise, step counts, arrivals) depends only on
+    the seed, so per-tier runs serve identical work."""
+    L = ucfg.latent_size**2
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_req_s, size=n_requests))
+    base = rng.normal(size=(prompt_pool, ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32) * 0.2
+    reqs = []
+    for i in range(n_requests):
+        t = int(rng.integers(t_lo, t_hi + 1))
+        ctx = base[int(rng.integers(prompt_pool))] + prompt_jitter * rng.normal(
+            size=(ucfg.ctx_len, ucfg.ctx_dim)
+        ).astype(np.float32)
+        tier = TIERS[i % len(TIERS)] if quality == "mix" else quality
+        pol = policy.resolve(t, quality=tier)
+        reqs.append(
+            GenRequest(
+                rid=i,
+                ctx=ctx,
+                noise=rng.normal(size=(L, ucfg.in_channels)).astype(np.float32),
+                timesteps=t,
+                plan=pol.plan,
+                policy=pol,
+                arrival_s=float(arrivals[i]),
+            )
+        )
+    return reqs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--t-lo", type=int, default=4)
+    ap.add_argument("--t-hi", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=6.0, help="Poisson arrivals req/s (mixed run)")
+    ap.add_argument("--cache-threshold", type=float, default=0.3, help="engine default / policy base")
+    ap.add_argument("--cache-slots", type=int, default=24)
+    ap.add_argument("--cache-bucket", type=int, default=125)
+    ap.add_argument("--prompt-pool", type=int, default=4)
+    ap.add_argument("--prompt-jitter", type=float, default=0.02)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.lanes = 8, 2
+
+    ucfg = get_unet_config("sd_toy")
+    n_up = U.n_up_steps(ucfg)
+    dcfg = DiffusionConfig(timesteps_sample=args.t_hi)
+    params = U.init_unet(jax.random.key(args.seed), ucfg)
+    cfg = EngineConfig(
+        n_lanes=args.lanes,
+        max_steps=args.t_hi,
+        l_sketch=min(3, n_up),
+        l_refine=min(2, n_up),
+        decode_images=False,
+        cache_mode="cross",
+        cache_slots=args.cache_slots,
+        cache_threshold=args.cache_threshold,
+        cache_t_bucket=args.cache_bucket,
+    )
+    policy = QualityPolicy.for_engine(ucfg, dcfg, cfg)
+    engine = DiffusionEngine(
+        ucfg, dcfg, params, None, cfg, scheduler=CacheAwareScheduler(window=4)
+    )
+
+    stream = lambda quality, rate=1e9: make_stream(
+        ucfg, policy, args.requests, rate, args.t_lo, args.t_hi, args.seed,
+        quality=quality, prompt_pool=args.prompt_pool,
+        prompt_jitter=args.prompt_jitter,
+    )
+    engine.run(stream("mix")[: 2 * args.lanes])  # compile-warm every branch
+
+    # -- per-tier closed-loop runs: deterministic FULL-step accounting -------
+    tier_rows: dict[str, dict] = {}
+    for tier in TIERS:
+        _, s = engine.run(stream(tier))
+        tier_rows[tier] = s
+    full_exact = tier_rows["exact"]["full_steps"]
+    reductions: dict[str, float] = {}
+    for tier in TIERS:
+        s = tier_rows[tier]
+        red = 1.0 - s["full_steps"] / max(full_exact, 1)
+        reductions[tier] = red
+        emit("policy", f"tier={tier}/full_steps", s["full_steps"], "steps")
+        emit("policy", f"tier={tier}/demoted_full_steps", s["demoted_full_steps"], "steps")
+        emit("policy", f"tier={tier}/demoted_sketch_steps", s["demoted_sketch_steps"], "steps")
+        emit("policy", f"tier={tier}/full_step_reduction", round(red, 3), "")
+        emit("policy", f"tier={tier}/throughput_req_s", s["throughput_req_s"], "req/s")
+    monotone = (
+        reductions["draft"] > reductions["balanced"] > reductions["high"]
+        > reductions["exact"] == 0.0
+    )
+    emit(
+        "policy", "acceptance/monotone_tiers", int(monotone), "",
+        "draft > balanced > high > exact = 0",
+    )
+
+    # -- mixed-tier stream: goodput + observability ---------------------------
+    _, s_mixed = engine.run(stream("mix"))
+    goodput_ratio = s_mixed["throughput_req_s"] / max(
+        tier_rows["exact"]["throughput_req_s"], 1e-9
+    )
+    _, s_poisson = engine.run(stream("mix", rate=args.rate), realtime=True)
+    emit("policy", "mixed/quality_mix", s_mixed["quality_mix"], "")
+    emit("policy", "mixed/cache_hit_rate", s_mixed["cache_hit_rate"], "")
+    emit("policy", "mixed/goodput_vs_exact", round(goodput_ratio, 3), "x", "closed loop")
+    emit("policy", f"mixed/poisson@{args.rate:g}/p50_latency_s", s_poisson["p50_latency_s"], "s")
+    emit("policy", f"mixed/poisson@{args.rate:g}/p99_latency_s", s_poisson["p99_latency_s"], "s")
+
+    if args.json:
+        out = {
+            "bench": "policy",
+            "config": {
+                "requests": args.requests,
+                "lanes": args.lanes,
+                "t_lo": args.t_lo,
+                "t_hi": args.t_hi,
+                "cache_threshold": args.cache_threshold,
+                "cache_bucket": args.cache_bucket,
+                "prompt_pool": args.prompt_pool,
+                "rate": args.rate,
+                "seed": args.seed,
+            },
+            "tiers": {
+                t: {
+                    "full_steps": tier_rows[t]["full_steps"],
+                    "full_step_reduction": round(reductions[t], 3),
+                    "demoted_full_steps": tier_rows[t]["demoted_full_steps"],
+                    "demoted_sketch_steps": tier_rows[t]["demoted_sketch_steps"],
+                    "throughput_req_s": tier_rows[t]["throughput_req_s"],
+                }
+                for t in TIERS
+            },
+            "mixed": {
+                "quality_mix": s_mixed["quality_mix"],
+                "cache_hit_rate": s_mixed["cache_hit_rate"],
+                "goodput_vs_exact": round(goodput_ratio, 3),
+                "poisson_p50_latency_s": s_poisson["p50_latency_s"],
+                "poisson_p99_latency_s": s_poisson["p99_latency_s"],
+            },
+            "gates": {
+                # plan-structural reductions: deterministic given the stream,
+                # so tight floors are safe across machines
+                "policy_full_step_reduction_draft": round(reductions["draft"], 3),
+                "policy_full_step_reduction_balanced": round(reductions["balanced"], 3),
+                "policy_full_step_reduction_high": round(reductions["high"], 3),
+                # strict monotonicity incl. exact == 0 (1.0 = holds)
+                "policy_monotone_tiers": float(monotone),
+                # wall-clock ratio: conservative floor, jitters with runner
+                "policy_mixed_goodput_vs_exact": round(goodput_ratio, 3),
+            },
+            "headline": {
+                "mixed_cache_hit_rate": s_mixed["cache_hit_rate"],
+                "mixed_goodput_req_s": s_mixed["throughput_req_s"],
+                "exact_goodput_req_s": tier_rows["exact"]["throughput_req_s"],
+                "poisson_p50_latency_s": s_poisson["p50_latency_s"],
+                "poisson_p99_latency_s": s_poisson["p99_latency_s"],
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        emit("policy", "trajectory_json", args.json, "", "written")
+
+
+if __name__ == "__main__":
+    main()

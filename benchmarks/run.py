@@ -10,13 +10,13 @@ import sys
 import time
 
 from benchmarks import (
-    bench_fig2_profile,
-    bench_lm_skip,
     bench_fig15_streaming,
     bench_fig16_reuse,
     bench_fig17_breakdown,
     bench_fig18_sota_acc,
+    bench_fig2_profile,
     bench_kernels,
+    bench_lm_skip,
     bench_roofline,
     bench_table2_pas,
     bench_table3_sota,

@@ -8,8 +8,18 @@ end-to-end on a trained toy model:
   step 4  validate  — generate with each candidate, check the quality
                       proxy, emit the best valid plan
 
+The emitted ``--profile-out`` file closes the calibrate->serve loop: the
+serving quality policy (``repro.serving.policy``) loads it to refine the
+per-request cache thresholds per timestep bucket, e.g.::
+
+  PYTHONPATH=src python examples/pas_calibration.py --profile-out profile.npz
+  PYTHONPATH=src python -m repro.launch.serve --mode diffusion \\
+      --quality balanced --profile profile.npz --cache cross
+
 Run:  PYTHONPATH=src python examples/pas_calibration.py
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,12 +31,23 @@ from repro.core import phase_division as PD
 from repro.core import sampler as SM
 from repro.core import shift_score as SS
 from repro.core.metrics import latent_cosine
+from repro.models import diffusion as D
 from repro.models import unet as U
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--timesteps", type=int, default=16, help="calibration denoise steps")
+    ap.add_argument("--prompts", type=int, default=3, help="calibration prompt count")
+    ap.add_argument(
+        "--profile-out", default=None, metavar="PATH",
+        help="save the shift-score profile (.npz) the serving quality "
+        "policy can load (repro.serving.policy / serve.py --profile)",
+    )
+    args = ap.parse_args()
+
     ucfg = get_unet_config("sd_toy")
-    dcfg = DiffusionConfig(timesteps_sample=16)
+    dcfg = DiffusionConfig(timesteps_sample=args.timesteps)
     total = dcfg.timesteps_sample
     key = jax.random.key(0)
     params = U.init_unet(key, ucfg)
@@ -34,7 +55,7 @@ def main():
 
     b, L = 2, ucfg.latent_size**2
     # calibration prompt set (paper: 5% of the target set)
-    n_cal = 3
+    n_cal = args.prompts
     all_scores = []
     print(f"[1/4] profiling {n_cal} calibration prompts ...")
     for i in range(n_cal):
@@ -51,21 +72,32 @@ def main():
     stats = PD.phase_stats(profile, d_star)
     print(f"    D* = {d_star}  mu_sketch={stats['mu_sketch']:.3f} "
           f"mu_refine={stats['mu_refine']:.3f} outliers={profile.outlier_blocks}")
+    if args.profile_out:
+        SS.save_profile(args.profile_out, profile, ts=np.asarray(D.sample_timesteps(dcfg)))
+        print(f"    profile saved to {args.profile_out} "
+              f"(load with serve.py --profile / repro.serving.policy)")
 
     print("[2/4] parsing the model -> cost function f(l) ...")
     f = FW.cost_function(ucfg)
     print("    f(l) =", [round(f(l), 3) for l in range(1, n_up + 1)])
 
     print("[3/4] searching PAS plans under constraints ...")
+    # keep the enumeration feasible at short calibration schedules, where
+    # D* (and with it the T_complete <= T_sketch bound) can sit at 1
+    t_complete_range = tuple(t for t in (1, 2, 3) if t <= max(d_star, 1))
     cons = FW.SearchConstraints(
         total_steps=total,
         d_star=d_star,
         n_outlier_blocks=max(len(profile.outlier_blocks), 1),
         min_quality=0.90,  # cosine proxy threshold
-        t_complete_range=(2, 3),
+        t_complete_range=t_complete_range,
         t_sparse_range=(2, 3, 4),
     )
     sols = FW.search_plans(ucfg, cons)
+    if not sols:
+        print("    no feasible plan under the constraints; relax them "
+              "(short calibration schedules can pin D* to 1)")
+        return
     print(f"    {len(sols)} feasible plans; best MAC reduction "
           f"{sols[0].mac_reduction:.2f}x")
 

@@ -5,8 +5,10 @@
 3. Run the same sampler under PHASE-AWARE SAMPLING (PAS).
 4. Report the MAC reduction (paper Eq. 3) and output fidelity.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--timesteps 20]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
@@ -19,8 +21,12 @@ from repro.models import unet as U
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--timesteps", type=int, default=20, help="denoise steps")
+    args = ap.parse_args()
+
     ucfg = get_unet_config("sd_toy")
-    dcfg = DiffusionConfig(timesteps_sample=20)
+    dcfg = DiffusionConfig(timesteps_sample=args.timesteps)
     key = jax.random.key(0)
     k1, k2, k3 = jax.random.split(key, 3)
 
@@ -39,7 +45,11 @@ def main():
     full = jax.jit(lambda n: SM.pas_denoise(ucfg, dcfg, params, None, n, ctx, uncond))(noise)
 
     print("[2/2] phase-aware sampling...")
-    plan = PASPlan(t_sketch=10, t_complete=2, t_sparse=3, l_sketch=3, l_refine=2)
+    t = dcfg.timesteps_sample
+    plan = PASPlan(
+        t_sketch=max(1, t // 2), t_complete=min(max(1, t // 2), 2), t_sparse=3,
+        l_sketch=min(3, U.n_up_steps(ucfg)), l_refine=min(2, U.n_up_steps(ucfg)),
+    )
     plan.validate(dcfg.timesteps_sample, U.n_up_steps(ucfg))
     pas = jax.jit(lambda n: SM.pas_denoise(ucfg, dcfg, params, plan, n, ctx, uncond))(noise)
 

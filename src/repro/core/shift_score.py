@@ -84,3 +84,26 @@ def build_profile(all_scores: Sequence[np.ndarray]) -> ShiftProfile:
     """Average per-image score curves, normalize, detect outliers."""
     avg = np.mean([minmax_normalize(s) for s in all_scores], axis=0)
     return ShiftProfile(scores=avg, outlier_blocks=detect_outliers(avg))
+
+
+def save_profile(path: str, profile: ShiftProfile, ts: Sequence[int] | None = None) -> None:
+    """Persist a calibration profile (plus, optionally, the train timesteps
+    of the calibration schedule) so serving can resolve per-timestep cache
+    thresholds from it (``repro.serving.policy``)."""
+    np.savez_compressed(
+        path,
+        scores=np.asarray(profile.scores, np.float32),
+        outlier_blocks=np.asarray(profile.outlier_blocks, np.int64),
+        ts=np.asarray(ts if ts is not None else (), np.int64),
+    )
+
+
+def load_profile(path: str) -> tuple[ShiftProfile, np.ndarray | None]:
+    """Inverse of :func:`save_profile` -> (profile, calibration ts or None)."""
+    with np.load(path) as z:
+        profile = ShiftProfile(
+            scores=np.asarray(z["scores"], np.float32),
+            outlier_blocks=tuple(int(b) for b in z["outlier_blocks"]),
+        )
+        ts = np.asarray(z["ts"], np.int64) if "ts" in z.files else np.zeros((0,), np.int64)
+    return profile, (ts if ts.size else None)

@@ -17,6 +17,15 @@ captures (DeepCache-style), ``cross`` lets requests with nearby prompts and
 timesteps reuse each other's, with ``--cache-threshold`` as the
 quality/reuse knob (0 = bit-exact with ``off``).
 
+``--quality {draft,balanced,high,exact,<q>}`` resolves a per-request
+quality/compute tradeoff through ``repro.serving.policy``: the tier (or a
+continuous quality in [0, 1]) picks both the PAS plan shape and the
+feature-cache threshold per request (``exact`` = all-FULL + threshold 0 =
+bit-exact with the stock path).  ``--profile PATH`` loads a shift-score
+calibration profile (``examples/pas_calibration.py --profile-out``) and
+refines the thresholds per timestep bucket.  Under ``--http`` the quality
+knob also arrives per request in the payload (``"quality": "draft"``).
+
 ``--shards N`` shards the continuous engine's lane axis over N devices
 (``repro.serving.ShardedDiffusionEngine``): each device owns ``batch / N``
 lanes, branch classes are chosen per shard, and the feature cache splits
@@ -69,6 +78,7 @@ from repro.serving import (
     GenRequest,
     HTTPFrontend,
     PlanAwareScheduler,
+    QualityPolicy,
     RequestFactory,
     default_pas_plan as _serving_default_pas_plan,
     make_serving_engine,
@@ -108,10 +118,24 @@ def pack_batches(reqs: list[Request], batch: int) -> list[list[Request]]:
 # ---------------------------------------------------------------------------
 
 
-#: the CLI's stock phase-aware plan now lives with the serving stack
-#: (``repro.serving.frontend``) so the HTTP request factory and this CLI
+#: the CLI's stock phase-aware plan now lives with the quality policy
+#: (``repro.serving.policy``) so the HTTP request factory and this CLI
 #: build identical plans; re-exported here for callers of the old name
 default_pas_plan = _serving_default_pas_plan
+
+
+def build_quality_policy(args, ucfg, dcfg, cfg) -> QualityPolicy:
+    """The process-wide quality resolver: engine geometry + optional
+    shift-score calibration profile (``--profile``, as emitted by
+    ``examples/pas_calibration.py --profile-out``)."""
+    profile = profile_ts = None
+    if getattr(args, "profile", None):
+        from repro.core.shift_score import load_profile
+
+        profile, profile_ts = load_profile(args.profile)
+    return QualityPolicy.for_engine(
+        ucfg, dcfg, cfg, profile=profile, profile_ts=profile_ts
+    )
 
 
 def _check_shards_available(n_shards: int) -> None:
@@ -127,20 +151,35 @@ def _check_shards_available(n_shards: int) -> None:
         )
 
 
-def make_diffusion_requests(args, ucfg) -> list[GenRequest]:
-    """Synthetic request stream: per-request prompt embeddings and noise."""
+def make_diffusion_requests(args, ucfg, policy: QualityPolicy | None = None) -> list[GenRequest]:
+    """Synthetic request stream: per-request prompt embeddings and noise.
+
+    With ``--quality`` (and a ``policy``) every request resolves its plan +
+    cache thresholds through the quality policy; otherwise the legacy
+    ``--pas`` switch picks the stock plan and the engine threshold applies.
+    """
     n_up = U.n_up_steps(ucfg)
     L = ucfg.latent_size**2
+    quality = getattr(args, "quality", None)
     reqs = []
     for i in range(args.requests):
         rng = np.random.default_rng(args.seed * 100_003 + i)
+        if policy is not None:
+            pol = policy.resolve(args.timesteps, quality=quality, pas=args.pas)
+            plan, pol_obj = pol.plan, pol
+        else:
+            plan, pol_obj = (
+                default_pas_plan(args.timesteps, n_up) if args.pas else None,
+                None,
+            )
         reqs.append(
             GenRequest(
                 rid=i,
                 ctx=rng.normal(size=(ucfg.ctx_len, ucfg.ctx_dim)).astype(np.float32),
                 noise=rng.normal(size=(L, ucfg.in_channels)).astype(np.float32),
                 timesteps=args.timesteps,
-                plan=default_pas_plan(args.timesteps, n_up) if args.pas else None,
+                plan=plan,
+                policy=pol_obj,
             )
         )
     return reqs
@@ -204,6 +243,12 @@ def serve_diffusion(args) -> dict:
                 "--cache requires the continuous engine (lockstep batches have "
                 "no per-lane micro-steps to demote); drop --engine static or --cache"
             )
+        if getattr(args, "profile", None):
+            raise SystemExit(
+                "--profile requires the continuous engine (calibrated thresholds "
+                "drive the feature cache, which lockstep batches don't have); "
+                "drop --engine static or --profile"
+            )
         if n_shards > 1:
             raise SystemExit(
                 "--shards requires the continuous engine (lockstep batches have "
@@ -211,14 +256,19 @@ def serve_diffusion(args) -> dict:
             )
         ucfg, dcfg, params, vae_params = _init_diffusion_models(args)
         n_up = U.n_up_steps(ucfg)
-        reqs = make_diffusion_requests(args, ucfg)
-        plan_fn = (lambda t: default_pas_plan(t, n_up)) if args.pas else (lambda t: None)
+        policy = QualityPolicy(n_up)
+        quality = getattr(args, "quality", None)
+        reqs = make_diffusion_requests(args, ucfg, policy)
+        # lockstep batches share one plan per step count; resolve it through
+        # the same policy the continuous engine uses
+        plan_fn = lambda t: policy.resolve(t, quality=quality, pas=args.pas).plan
         done, summary = serve_static(
             ucfg, dcfg, params, vae_params, reqs, args.batch, plan_fn=plan_fn
         )
     else:
-        engine, ucfg, _dcfg, _cfg = build_continuous_engine(args)
-        reqs = make_diffusion_requests(args, ucfg)
+        engine, ucfg, dcfg, cfg = build_continuous_engine(args)
+        policy = build_quality_policy(args, ucfg, dcfg, cfg)
+        reqs = make_diffusion_requests(args, ucfg, policy)
         done, summary = engine.run(reqs)
 
     assert sorted(r.rid for r in done) == list(range(args.requests))
@@ -254,7 +304,11 @@ def serve_http(args) -> None:
     host, port = _parse_hostport(args.http)
     engine, ucfg, dcfg, cfg = build_continuous_engine(args, decode_images=False)
     driver = EngineDriver(engine, max_inflight=args.max_inflight)
-    factory = RequestFactory(ucfg, dcfg, cfg)
+    factory = RequestFactory(
+        ucfg, dcfg, cfg,
+        policy=build_quality_policy(args, ucfg, dcfg, cfg),
+        default_quality=getattr(args, "quality", None),
+    )
 
     async def amain() -> dict:
         driver.start()
@@ -353,6 +407,20 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4, help="lanes (continuous) / batch (static)")
     ap.add_argument("--timesteps", type=int, default=20)
     ap.add_argument("--pas", action="store_true", help="serve with phase-aware sampling")
+    ap.add_argument(
+        "--quality", default=None, metavar="TIER|Q",
+        help="per-request quality knob resolved by repro.serving.policy: a "
+        "named tier (draft|balanced|high|exact) or a number in [0,1]. "
+        "Decides the PAS plan shape AND the cache threshold per request "
+        "(exact = all-FULL + threshold 0 = bit-exact). With --http this is "
+        "the default for payloads carrying no 'quality' field.",
+    )
+    ap.add_argument(
+        "--profile", default=None, metavar="PATH",
+        help="shift-score calibration profile (.npz from examples/"
+        "pas_calibration.py --profile-out); refines quality-tier cache "
+        "thresholds into per-timestep-bucket thresholds",
+    )
     ap.add_argument(
         "--engine",
         choices=["continuous", "static"],

@@ -12,7 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models.unet import init_conv, init_gn, group_norm, uniconv_apply
+from repro.models.unet import group_norm, init_conv, init_gn, uniconv_apply
 
 Params = dict[str, Any]
 

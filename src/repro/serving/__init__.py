@@ -4,6 +4,8 @@
   ``ShardedLaneState``) + jitted micro-steps (single-device and GSPMD)
 * ``cache``     — cross-request feature cache (device slots + host LRU keys;
   single ring or shard-local rings)
+* ``policy``    — per-request quality resolution: tier/continuous quality ->
+  PAS plan + (calibrated) cache thresholds, one resolver for every layer
 * ``scheduler`` — admission queue packing policies (FIFO, plan-/cache-aware,
   warm-shard routing)
 * ``engine``    — the continuous-batching event loop (single-device +
@@ -39,9 +41,16 @@ from repro.serving.engine import (
     make_serving_engine,
     serve_static,
 )
-from repro.serving.frontend import HTTPFrontend, RequestFactory, default_pas_plan
+from repro.serving.frontend import HTTPFrontend, RequestFactory
 from repro.serving.lanes import LaneState, ShardedLaneState, make_plan_arrays
 from repro.serving.metrics import ServingMetrics
+from repro.serving.policy import (
+    QualityPolicy,
+    ResolvedPolicy,
+    TIER_QUALITY,
+    default_pas_plan,
+    parse_quality,
+)
 from repro.serving.scheduler import (
     CacheAwareScheduler,
     FIFOScheduler,
@@ -61,8 +70,11 @@ __all__ = [
     "HTTPFrontend",
     "LaneState",
     "PlanAwareScheduler",
+    "QualityPolicy",
     "RequestFactory",
+    "ResolvedPolicy",
     "ServingMetrics",
+    "TIER_QUALITY",
     "ShardedDiffusionEngine",
     "ShardedFeatureCache",
     "ShardedLaneState",
@@ -73,6 +85,7 @@ __all__ = [
     "latent_digest",
     "make_plan_arrays",
     "make_serving_engine",
+    "parse_quality",
     "prompt_signature",
     "serve_static",
     "signature_distance",

@@ -97,13 +97,18 @@ def select_entry_features(
     own: jax.Array,  # [2N, L, C] lane-cache features
     cached: jax.Array,  # [S, 2, L, C] cache slots
     src: jax.Array,  # [N] int32 slot index per lane; -1 = own
+    use: jax.Array | None = None,  # [N] bool consume mask (default: src >= 0)
 ) -> jax.Array:
     """Per-lane captured-vs-cached feature selection (inside the jitted
-    micro-step).  Pure gather + where: exact passthrough when ``src`` is all
-    -1, so the cache-enabled micro-step with no hits stays bit-identical."""
+    micro-step).  Pure gather + where: exact passthrough when nothing is
+    used, so the cache-enabled micro-step with no hits stays bit-identical.
+    ``use`` lets the micro-step add the device-side threshold comparison
+    (probed distance strictly below the lane's per-step threshold leaf)."""
     n = own.shape[0] // 2
     pick = cached[jnp.clip(src, 0, cached.shape[0] - 1)]  # [N, 2, L, C]
-    use = (src >= 0)[:, None, None]
+    if use is None:
+        use = src >= 0
+    use = use[:, None, None]
     cond = jnp.where(use, pick[:, 0], own[:n])
     unc = jnp.where(use, pick[:, 1], own[n:])
     return jnp.concatenate([cond, unc], axis=0)
@@ -173,12 +178,18 @@ class SlotRing:
 
     # -- lookup --------------------------------------------------------------
 
-    def probe(self, t: int, sig: np.ndarray, rid: int) -> int | None:
-        """Best matching warm slot for (timestep, signature), or None.
+    def probe_distance(
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None
+    ) -> tuple[int, float] | None:
+        """Best matching warm slot for (timestep, signature) with its
+        float32 signature distance, or None.
 
-        Read-only: no counters, no LRU touch (the admission policy uses this
-        to score queued requests without perturbing eviction order).
+        ``threshold`` is the *per-request* hit bound (the quality policy's
+        resolution); None falls back to the ring default.  Read-only: no
+        counters, no LRU touch (the admission policy uses this to score
+        queued requests without perturbing eviction order).
         """
+        thr = self.threshold if threshold is None else threshold
         mask = self.valid & (self.bucket == self.bucket_of(t))
         # disjoint scopes: intra = own slots only, cross = other requests'
         # slots only (a request's own slot sits at distance 0 and would
@@ -188,12 +199,23 @@ class SlotRing:
             return None
         d = np.linalg.norm(self.sig - np.asarray(sig, np.float32), axis=1)
         d = d / (np.linalg.norm(self.sig, axis=1) + 1e-12)
-        d = np.where(mask, d, np.inf)
+        d = np.where(mask, d, np.inf).astype(np.float32)
         best = int(np.argmin(d))
-        # strict: threshold 0 never hits (bit-exactness guarantee)
-        return best if d[best] < self.threshold else None
+        # strict: threshold 0 never hits (bit-exactness guarantee); the
+        # float32 distance is also what the jitted micro-step re-compares
+        # against the lane's threshold leaf, so host and device agree
+        return (best, float(d[best])) if d[best] < thr else None
 
-    def lookup(self, t: int, sig: np.ndarray, rid: int) -> int | None:
+    def probe(
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None
+    ) -> int | None:
+        """Slot-only convenience over :meth:`probe_distance`."""
+        hit = self.probe_distance(t, sig, rid, threshold)
+        return None if hit is None else hit[0]
+
+    def lookup(
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None
+    ) -> int | None:
         """Probe + hit/miss accounting + LRU touch, as one call.
 
         For callers that serve a request immediately on a hit.  The engine
@@ -202,7 +224,7 @@ class SlotRing:
         :meth:`note_miss`), so branch-vote losers neither skew the stats
         nor keep slots artificially warm.
         """
-        slot = self.probe(t, sig, rid)
+        slot = self.probe(t, sig, rid, threshold)
         if slot is not None:
             self.note_hit(slot)
         else:
@@ -220,7 +242,11 @@ class SlotRing:
         self.probes += 1
 
     def plan_warmth(self, req, shard: int | None = None) -> float:
-        """Fraction of a queued request's FULL steps that would hit now.
+        """Fraction of a queued request's FULL steps that would hit now,
+        probed at the request's *own* per-step thresholds (the quality
+        policy's resolution — a draft request scores warmer than an exact
+        one against the same slots, and a threshold-0 request always
+        scores 0).
 
         ``shard`` is accepted (and ignored) so single-ring and sharded
         caches expose one signature to the cache-aware scheduler.
@@ -233,12 +259,14 @@ class SlotRing:
         sig = getattr(req, "_sig", None)
         if lp is None or sig is None or not self.valid.any():
             return 0.0
+        thr = getattr(lp, "thr", None)
         hits, fulls = 0, 0
         for i in range(lp.n_steps):
             if lp.branches[i] != SM.FULL:
                 continue
             fulls += 1
-            if self.probe(int(lp.ts[i]), sig, getattr(req, "rid", -1)) is not None:
+            step_thr = None if thr is None or i >= len(thr) else float(thr[i])
+            if self.probe(int(lp.ts[i]), sig, getattr(req, "rid", -1), step_thr) is not None:
                 hits += 1
         return hits / max(fulls, 1)
 
@@ -483,8 +511,17 @@ class ShardedFeatureCache:
 
     # -- shard-local metadata ops -------------------------------------------
 
-    def probe(self, shard: int, t: int, sig: np.ndarray, rid: int) -> int | None:
-        return self.rings[shard].probe(t, sig, rid)
+    def probe(
+        self, shard: int, t: int, sig: np.ndarray, rid: int,
+        threshold: float | None = None,
+    ) -> int | None:
+        return self.rings[shard].probe(t, sig, rid, threshold)
+
+    def probe_distance(
+        self, shard: int, t: int, sig: np.ndarray, rid: int,
+        threshold: float | None = None,
+    ) -> tuple[int, float] | None:
+        return self.rings[shard].probe_distance(t, sig, rid, threshold)
 
     def note_hit(self, shard: int, slot: int) -> None:
         self.rings[shard].note_hit(slot)

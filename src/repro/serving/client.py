@@ -230,24 +230,37 @@ class LoadStats:
         }
 
 
+#: the tier rotation `--quality mix` cycles through (the per-request knob)
+QUALITY_TIERS = ("draft", "balanced", "high", "exact")
+
+
 def make_payloads(
-    n: int, t_lo: int, t_hi: int, plan_mode: str, seed: int
+    n: int, t_lo: int, t_hi: int, plan_mode: str, seed: int,
+    quality: str | None = None,
 ) -> list[dict]:
     """Synthetic payload stream: pooled prompts, mixed step counts.
 
     ``plan_mode``: ``mixed`` alternates PAS and all-FULL per request,
-    ``pas`` / ``full`` are uniform.
+    ``pas`` / ``full`` are uniform.  ``quality`` adds the per-request
+    quality knob: a fixed tier/number for every payload, or ``"mix"`` to
+    rotate through the named tiers (the mixed-quality-stream workload);
+    None omits the field (legacy plan_mode behaviour).
     """
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
         pas = {"mixed": i % 2 == 0, "pas": True, "full": False}[plan_mode]
-        out.append({
+        p = {
             "prompt": f"prompt-{int(rng.integers(4))}",
             "timesteps": int(rng.integers(t_lo, t_hi + 1)),
             "pas": pas,
             "seed": int(rng.integers(1 << 30)),
-        })
+        }
+        if quality == "mix":
+            p["quality"] = QUALITY_TIERS[i % len(QUALITY_TIERS)]
+        elif quality is not None:
+            p["quality"] = quality
+        out.append(p)
     return out
 
 
@@ -317,6 +330,7 @@ async def run_load(
     t_lo: int = 3,
     t_hi: int = 6,
     plan_mode: str = "mixed",
+    quality: str | None = None,
     cancel: int = 0,
     cancel_after_step: int = 1,
     seed: int = 0,
@@ -333,7 +347,7 @@ async def run_load(
     its direct-engine phase served).
     """
     if payloads is None:
-        payloads = make_payloads(requests, t_lo, t_hi, plan_mode, seed)
+        payloads = make_payloads(requests, t_lo, t_hi, plan_mode, seed, quality=quality)
     else:
         payloads = [dict(p) for p in payloads[:requests]]
     cancel_idx = set(range(min(cancel, requests)))
@@ -416,6 +430,7 @@ async def _amain(args) -> int:
         t_lo=args.t_lo,
         t_hi=args.t_hi,
         plan_mode=args.plan_mode,
+        quality=args.quality,
         cancel=args.cancel,
         seed=args.seed,
     )
@@ -470,6 +485,12 @@ def main() -> None:
     ap.add_argument(
         "--mixed-plans", action="store_const", const="mixed", dest="plan_mode",
         help="shorthand for --plan-mode mixed",
+    )
+    ap.add_argument(
+        "--quality", default=None, metavar="TIER|Q|mix",
+        help="per-request quality knob in every payload: a named tier "
+        "(draft|balanced|high|exact), a number in [0,1], or 'mix' to "
+        "rotate through the tiers (mixed-quality stream)",
     )
     ap.add_argument(
         "--cancel", type=int, default=0,

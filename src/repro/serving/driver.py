@@ -236,6 +236,7 @@ class EngineDriver:
             self.engine.submit(t.req)
             self._emit(rid, {
                 "event": "queued", "rid": rid,
+                "quality": t.req.quality_tier,
                 "pending": self.engine.n_pending, "active": self.engine.n_active,
             })
         elif kind == "cancel":

@@ -34,6 +34,7 @@ from repro.models import vae as V
 from repro.serving import lanes as LN
 from repro.serving.cache import FeatureCache, ShardedFeatureCache, prompt_signature
 from repro.serving.metrics import ServingMetrics
+from repro.serving.policy import ResolvedPolicy
 from repro.serving.scheduler import FIFOScheduler
 
 Params = dict[str, Any]
@@ -58,6 +59,10 @@ class GenRequest:
     #: FULL steps from cached features (neither another request's slots nor
     #: its own intra-mode captures) — every planned FULL step runs in full
     allow_cache: bool = True
+    #: per-request quality resolution (``repro.serving.policy``); carries
+    #: the cache-threshold decision threaded down to the jitted micro-step.
+    #: None = legacy request: the engine-global threshold applies.
+    policy: ResolvedPolicy | None = None
 
     _lane_plan: LN.LanePlan | None = dataclasses.field(default=None, repr=False)
     _sig: np.ndarray | None = dataclasses.field(default=None, repr=False)
@@ -65,6 +70,17 @@ class GenRequest:
     def branch_vector(self) -> np.ndarray:
         assert self._lane_plan is not None, "request not yet submitted"
         return self._lane_plan.branches[: self.timesteps]
+
+    @property
+    def quality_tier(self) -> str:
+        """Resolved tier label ("full"/"pas" for legacy requests)."""
+        if self.policy is not None:
+            return self.policy.tier
+        return "pas" if self.plan is not None else "full"
+
+    @property
+    def refine_demotions(self) -> bool:
+        return self.policy is not None and self.policy.refine_demotions
 
 
 @dataclasses.dataclass
@@ -103,7 +119,10 @@ class EngineConfig:
     cache_mode: str = "off"
     cache_slots: int = 16
     #: shift-score-style relative distance bound on prompt signatures; hits
-    #: require distance *strictly* below it, so 0.0 never hits (bit-exact)
+    #: require distance *strictly* below it, so 0.0 never hits (bit-exact).
+    #: This is only the *default* the quality policy resolves per request —
+    #: a request carrying a ``GenRequest.policy`` brings its own (possibly
+    #: per-timestep-bucket) thresholds, stored per lane-step on device.
     cache_threshold: float = 0.15
     #: timestep bucket width in train-timestep units
     cache_t_bucket: int = 125
@@ -199,10 +218,17 @@ class DiffusionEngine:
                     f"({req.plan.l_sketch}, {req.plan.l_refine}) does not match "
                     f"engine ({self.config.l_sketch}, {self.config.l_refine})"
                 )
+        threshold = (
+            self.config.cache_threshold
+            if req.policy is None
+            else req.policy.threshold_spec(self.config.cache_threshold)
+        )
         req._lane_plan = LN.make_plan_arrays(
-            self.dcfg, req.timesteps, req.plan, self.config.max_steps
+            self.dcfg, req.timesteps, req.plan, self.config.max_steps,
+            threshold=threshold,
         )
         req._sig = prompt_signature(req.ctx)
+        self.metrics.record_submission(req.quality_tier)
         self.scheduler.add(req)
 
     # -- introspection ------------------------------------------------------
@@ -279,35 +305,57 @@ class DiffusionEngine:
                 jnp.asarray(lp.ts),
                 jnp.asarray(lp.t_prev),
                 jnp.int32(lp.n_steps),
+                jnp.asarray(lp.thr),
             )
             self._lane_req[lane] = req
             self._lane_step[lane] = 0
             self._lane_admit_s[lane] = now_s
             self._stall[lane] = 0
 
-    def _probe_cache(self, active: list[int], planned: np.ndarray) -> dict[int, int]:
-        """Warm-slot probe for active lanes whose next planned step is FULL.
+    def _probe_eligible(self, req: GenRequest, lane: int, planned: int) -> bool:
+        """Whether a lane's next planned step may be served from the cache.
 
-        Returns {lane: slot} for the lanes whose FULL step can be served
-        from the cache this micro-step (host metadata only — the feature
-        tensors stay on device).  Probes are read-only: hit/miss counters
-        and LRU touches settle in :meth:`step` for the lanes that actually
-        advance, so a lane stuck behind the branch vote neither inflates
-        the stats nor keeps its candidate slot artificially warm.
+        Planned FULL steps always probe (the FULL->SKETCH demotion);
+        planned SKETCH steps probe only when the request's quality policy
+        opted into the deeper SKETCH->REFINE demotion.
         """
-        hits: dict[int, int] = {}
+        if not req.allow_cache or self._lane_step[lane] < self.config.cache_min_step:
+            return False
+        if planned == SM.FULL:
+            return True
+        return planned == SM.SKETCH and req.refine_demotions
+
+    def _probe_cache(
+        self, active: list[int], planned: np.ndarray
+    ) -> dict[int, tuple[int, float]]:
+        """Warm-slot probe for active lanes whose next planned step is
+        cache-servable (FULL always; SKETCH when the request's policy
+        allows REFINE demotions).
+
+        Returns {lane: (slot, signature distance)} for the lanes servable
+        this micro-step (host metadata only — the feature tensors stay on
+        device; the distance rides along so the jitted micro-step can
+        re-compare it against the lane's device-resident threshold leaf).
+        Each probe uses the *request's own* per-step threshold.  Probes are
+        read-only: hit/miss counters and LRU touches settle in :meth:`step`
+        for the lanes that actually advance, so a lane stuck behind the
+        branch vote neither inflates the stats nor keeps its candidate slot
+        artificially warm.
+        """
+        hits: dict[int, tuple[int, float]] = {}
         if self.cache is None:
             return hits
         for k, lane in enumerate(active):
-            if planned[k] != SM.FULL:
-                continue
             req = self._lane_req[lane]
-            if not req.allow_cache or self._lane_step[lane] < self.config.cache_min_step:
+            if not self._probe_eligible(req, lane, int(planned[k])):
                 continue
-            t = int(req._lane_plan.ts[self._lane_step[lane]])
-            slot = self.cache.probe(t, req._sig, req.rid)
-            if slot is not None:
-                hits[lane] = slot
+            step = self._lane_step[lane]
+            t = int(req._lane_plan.ts[step])
+            hit = self.cache.probe_distance(
+                t, req._sig, req.rid, float(req._lane_plan.thr[step])
+            )
+            if hit is not None:
+                hits[lane] = hit
         return hits
 
     def step(self, now_s: float = 0.0, clock: Callable[[], float] | None = None) -> list[CompletedRequest]:
@@ -328,13 +376,16 @@ class DiffusionEngine:
         )
         # cache demotion: a planned FULL step with a warm, close-enough slot
         # executes as SKETCH consuming the cached features of another (or an
-        # earlier) FULL step.  The packing policy votes over the *effective*
-        # classes so demoted lanes amortize with planned SKETCH lanes.
+        # earlier) FULL step; a planned SKETCH step whose quality policy
+        # allows it demotes one further, to REFINE on the slot's refine
+        # features.  The packing policy votes over the *effective* classes
+        # so demoted lanes amortize with cheaper planned lanes.
         hit_slots = self._probe_cache(active, planned)
+        planned_of = {int(lane): int(planned[k]) for k, lane in enumerate(active)}
         effective = planned.copy()
         for k, lane in enumerate(active):
             if lane in hit_slots:
-                effective[k] = SM.SKETCH
+                effective[k] = SM.SKETCH if planned[k] == SM.FULL else SM.REFINE
         b_star = self.scheduler.pick_branch(effective, self._stall[active])
 
         # the advance mask is deterministic from the host-known plans +
@@ -343,19 +394,31 @@ class DiffusionEngine:
         sel = np.zeros((self.config.n_lanes,), bool)
         advanced = np.asarray(active)[effective == b_star]
         sel[advanced] = True
-        n_demoted = 0
+        n_demoted = n_demoted_rf = 0
         if self.cache is not None:
             feat_src = np.full((self.config.n_lanes,), -1, np.int32)
-            if b_star == SM.SKETCH:
+            feat_dist = np.full((self.config.n_lanes,), np.inf, np.float32)
+            if b_star in (SM.SKETCH, SM.REFINE):
                 for lane in advanced:
-                    slot = hit_slots.get(int(lane))
-                    if slot is not None:
-                        feat_src[lane] = slot
-                        self.cache.note_hit(slot)
+                    hit = hit_slots.get(int(lane))
+                    if hit is None:
+                        # a planned (un-demoted) partial step that probed
+                        # and missed settles its accounting here
+                        req = self._lane_req[lane]
+                        if self._probe_eligible(req, int(lane), planned_of[int(lane)]):
+                            self.cache.note_miss()
+                        continue
+                    slot, dist = hit
+                    feat_src[lane] = slot
+                    feat_dist[lane] = dist
+                    self.cache.note_hit(slot)
+                    if planned_of[int(lane)] == SM.FULL:
                         n_demoted += 1
+                    else:
+                        n_demoted_rf += 1
             self._state = self._micro(
                 self._state, jnp.int32(b_star), jnp.asarray(sel),
-                jnp.asarray(feat_src), self.cache.state,
+                jnp.asarray(feat_src), jnp.asarray(feat_dist), self.cache.state,
             )
             if b_star == SM.FULL:
                 # fresh captures become warm slots: reserve host-side
@@ -388,10 +451,13 @@ class DiffusionEngine:
         self._lane_step[sel] += 1
         self._stall[active] += 1
         self._stall[sel] = 0
-        n_full = len(advanced) if b_star == SM.FULL else 0
+        n_adv = len(advanced)
         self.metrics.record_step(
             self.config.n_lanes, len(active), int(sel.sum()),
-            n_full=n_full, n_demoted=n_demoted,
+            n_full=n_adv if b_star == SM.FULL else 0,
+            n_sketch=n_adv if b_star == SM.SKETCH else 0,
+            n_refine=n_adv if b_star == SM.REFINE else 0,
+            n_demoted=n_demoted, n_demoted_refine=n_demoted_rf,
         )
 
         done: list[CompletedRequest] = []
@@ -606,28 +672,34 @@ class ShardedDiffusionEngine(DiffusionEngine):
                 jnp.asarray(lp.ts),
                 jnp.asarray(lp.t_prev),
                 jnp.int32(lp.n_steps),
+                jnp.asarray(lp.thr),
             )
             self._lane_req[lane] = req
             self._lane_step[lane] = 0
             self._lane_admit_s[lane] = now_s
             self._stall[lane] = 0
 
-    def _probe_cache(self, active: list[int], planned: np.ndarray) -> dict[int, int]:
-        """{lane: *shard-local* slot} for FULL steps servable from the
-        lane's own shard ring (reuse never crosses a shard)."""
-        hits: dict[int, int] = {}
+    def _probe_cache(
+        self, active: list[int], planned: np.ndarray
+    ) -> dict[int, tuple[int, float]]:
+        """{lane: (*shard-local* slot, signature distance)} for cache-
+        servable steps on the lane's own shard ring (reuse never crosses a
+        shard); probes use the request's own per-step threshold."""
+        hits: dict[int, tuple[int, float]] = {}
         if self.cache is None:
             return hits
         for k, lane in enumerate(active):
-            if planned[k] != SM.FULL:
-                continue
             req = self._lane_req[lane]
-            if not req.allow_cache or self._lane_step[lane] < self.config.cache_min_step:
+            if not self._probe_eligible(req, lane, int(planned[k])):
                 continue
-            t = int(req._lane_plan.ts[self._lane_step[lane]])
-            slot = self.cache.probe(self._shard_of(lane), t, req._sig, req.rid)
-            if slot is not None:
-                hits[lane] = slot
+            step = self._lane_step[lane]
+            t = int(req._lane_plan.ts[step])
+            hit = self.cache.probe_distance(
+                self._shard_of(lane), t, req._sig, req.rid,
+                float(req._lane_plan.thr[step]),
+            )
+            if hit is not None:
+                hits[lane] = hit
         return hits
 
     def step(self, now_s: float = 0.0, clock: Callable[[], float] | None = None) -> list[CompletedRequest]:
@@ -649,10 +721,11 @@ class ShardedDiffusionEngine(DiffusionEngine):
             np.int64,
         )
         hit_slots = self._probe_cache(active, planned)
+        planned_of = {int(lane): int(planned[k]) for k, lane in enumerate(active)}
         effective = planned.copy()
         for k, lane in enumerate(active):
             if lane in hit_slots:
-                effective[k] = SM.SKETCH
+                effective[k] = SM.SKETCH if planned[k] == SM.FULL else SM.REFINE
 
         n = self.config.n_lanes
         active_arr = np.asarray(active)
@@ -672,21 +745,33 @@ class ShardedDiffusionEngine(DiffusionEngine):
             votes.append((s, b, adv))
 
         n_full = sum(len(adv) for _, b, adv in votes if b == SM.FULL)
-        n_demoted = 0
+        n_sketch = sum(len(adv) for _, b, adv in votes if b == SM.SKETCH)
+        n_refine = sum(len(adv) for _, b, adv in votes if b == SM.REFINE)
+        n_demoted = n_demoted_rf = 0
         if self.cache is not None:
             feat_src = np.full((n,), -1, np.int32)
+            feat_dist = np.full((n,), np.inf, np.float32)
             for s, b, adv in votes:
-                if b != SM.SKETCH:
+                if b not in (SM.SKETCH, SM.REFINE):
                     continue
                 for lane in adv:
-                    slot = hit_slots.get(int(lane))
-                    if slot is not None:
-                        feat_src[lane] = slot
-                        self.cache.note_hit(s, slot)
+                    hit = hit_slots.get(int(lane))
+                    if hit is None:
+                        req = self._lane_req[lane]
+                        if self._probe_eligible(req, int(lane), planned_of[int(lane)]):
+                            self.cache.note_miss(s)  # probed partial, no warm slot
+                        continue
+                    slot, dist = hit
+                    feat_src[lane] = slot
+                    feat_dist[lane] = dist
+                    self.cache.note_hit(s, slot)
+                    if planned_of[int(lane)] == SM.FULL:
                         n_demoted += 1
+                    else:
+                        n_demoted_rf += 1
             self._state = self._micro(
                 self._state, self._params, jnp.asarray(b_arr), jnp.asarray(sel),
-                jnp.asarray(feat_src), self.cache.state,
+                jnp.asarray(feat_src), jnp.asarray(feat_dist), self.cache.state,
             )
             # fresh captures -> shard-local warm slots, one sharded scatter:
             # per-shard segments of the padded [n_lanes] index arrays carry
@@ -730,7 +815,9 @@ class ShardedDiffusionEngine(DiffusionEngine):
         shard_active = [int((shard_ids == s).sum()) for s in range(self.n_shards)]
         self.metrics.record_step(
             n, len(active), int(sel.sum()),
-            n_full=n_full, n_demoted=n_demoted, shard_active=shard_active,
+            n_full=n_full, n_sketch=n_sketch, n_refine=n_refine,
+            n_demoted=n_demoted, n_demoted_refine=n_demoted_rf,
+            shard_active=shard_active,
         )
 
         done: list[CompletedRequest] = []

@@ -11,9 +11,18 @@ backpressure surfaces as HTTP 429.
 Endpoints (HTTP/1.1, ``Connection: close``):
 
 ``POST /generate``
-    JSON body ``{"prompt": str, "timesteps": int, "pas": bool,
-    "seed": int, "allow_cache": bool, "stream": bool}`` (all optional but
-    ``timesteps`` recommended).  With ``stream`` (the default) the
+    JSON body ``{"prompt": str, "timesteps": int, "quality": str|float,
+    "plan": {...}, "pas": bool, "seed": int, "allow_cache": bool,
+    "stream": bool}`` (all optional but ``timesteps`` recommended).
+    ``quality`` is the per-request quality knob — a named tier
+    (``draft``/``balanced``/``high``/``exact``) or a number in [0, 1] —
+    resolved by :mod:`repro.serving.policy` into a PAS plan plus the
+    request's cache thresholds (``exact`` = all-FULL + threshold 0 =
+    bit-exact with today's default path); ``plan`` optionally overrides
+    the tier's plan shape with explicit ``{t_sketch, t_complete, t_sparse,
+    l_sketch, l_refine}`` fields (cache-geometry fields default to the
+    engine's); ``pas`` is the legacy stock-plan switch, consulted only
+    when no ``quality`` is given.  With ``stream`` (the default) the
     response is ``200`` chunked NDJSON — one JSON object per line:
     ``{"event": "queued", ...}``, one ``{"event": "step", "step": k,
     "n_steps": n}`` per advanced denoise step, then exactly one terminal
@@ -27,7 +36,11 @@ Endpoints (HTTP/1.1, ``Connection: close``):
 ``GET /healthz``
     Liveness + occupancy snapshot (lock-free, approximate).
 ``GET /stats``
-    Full serving-metrics summary, taken on the driver thread.
+    Full serving-metrics summary, taken on the driver thread — including
+    per-branch-class executed-step counts (``full_steps`` /
+    ``sketch_steps`` / ``refine_steps``), cache demotions + hit rate, and
+    the per-quality-tier request mix (``quality_mix``), so mixed-quality
+    streams are observable without the bench harness.
 ``POST /shutdown``
     Graceful drain: ``202`` immediately, then stop accepting, run every
     in-flight request to a terminal event, flush the open streams, and
@@ -49,29 +62,14 @@ from typing import Any
 import numpy as np
 
 from repro.common.types import PASPlan
-from repro.serving.driver import TERMINAL_EVENTS, EngineDriver, SubmitRejected
+from repro.serving.driver import EngineDriver, SubmitRejected, TERMINAL_EVENTS
+# plan + threshold resolution lives in exactly one module now; the old
+# ``frontend.default_pas_plan`` import path keeps working via this re-export
+from repro.serving.policy import QualityPolicy, default_pas_plan  # noqa: F401
 
 _MAX_BODY = 1 << 20  # 1 MiB: generate payloads are tiny JSON
 
-
-def default_pas_plan(
-    timesteps: int, n_up: int, l_sketch: int | None = None, l_refine: int | None = None
-) -> PASPlan:
-    """The serving stack's stock phase-aware plan (same shape as the seed
-    server's, but valid down to ``timesteps=1`` so HTTP clients may ask
-    for arbitrarily short denoises); ``l_sketch`` / ``l_refine`` default
-    to the engine-standard ``min(3, n_up)`` / ``min(2, n_up)`` cache
-    geometry."""
-    t_sketch = max(1, timesteps // 2)
-    plan = PASPlan(
-        t_sketch=t_sketch,
-        t_complete=min(t_sketch, max(2, timesteps // 10)),
-        t_sparse=4,
-        l_sketch=min(3, n_up) if l_sketch is None else l_sketch,
-        l_refine=min(2, n_up) if l_refine is None else l_refine,
-    )
-    plan.validate(timesteps, n_up)
-    return plan
+_PLAN_FIELDS = ("t_sketch", "t_complete", "t_sparse", "l_sketch", "l_refine")
 
 
 class RequestFactory:
@@ -83,9 +81,15 @@ class RequestFactory:
     ``latent_digest`` a deterministic function of the payload (cache off),
     and what gives the cross-request feature cache real prompt locality
     under repeated prompts.
+
+    Quality knobs in the payload (``quality`` tier/number, explicit
+    ``plan`` overrides, the legacy ``pas`` switch) resolve through one
+    :class:`~repro.serving.policy.QualityPolicy`; ``default_quality``
+    applies to payloads that carry no knob of their own (the
+    ``--quality`` CLI default).
     """
 
-    def __init__(self, ucfg, dcfg, engine_config):
+    def __init__(self, ucfg, dcfg, engine_config, policy=None, default_quality=None):
         from repro.models import unet as U
 
         self.ucfg, self.dcfg = ucfg, dcfg
@@ -93,8 +97,36 @@ class RequestFactory:
         self.l_sketch = engine_config.l_sketch
         self.l_refine = engine_config.l_refine
         self.n_up = U.n_up_steps(ucfg)
+        self.policy = (
+            policy
+            if policy is not None
+            else QualityPolicy.for_engine(ucfg, dcfg, engine_config)
+        )
+        self.default_quality = default_quality
         self._rid = itertools.count()
         self._lock = threading.Lock()
+
+    def _parse_plan(self, payload: dict[str, Any], timesteps: int) -> PASPlan | None:
+        spec = payload.get("plan")
+        if spec is None:
+            return None
+        if not isinstance(spec, dict):
+            raise ValueError("plan must be a JSON object of PASPlan fields")
+        unknown = set(spec) - set(_PLAN_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown plan fields: {sorted(unknown)}")
+        try:
+            plan = PASPlan(
+                t_sketch=int(spec["t_sketch"]),
+                t_complete=int(spec["t_complete"]),
+                t_sparse=int(spec["t_sparse"]),
+                l_sketch=int(spec.get("l_sketch", self.l_sketch)),
+                l_refine=int(spec.get("l_refine", self.l_refine)),
+            )
+        except KeyError as e:
+            raise ValueError(f"plan is missing field {e.args[0]!r}") from None
+        plan.validate(timesteps, self.n_up)
+        return plan
 
     def make(self, payload: dict[str, Any]):
         from repro.serving.engine import GenRequest
@@ -111,9 +143,13 @@ class RequestFactory:
         mix = int.from_bytes(hashlib.sha256(prompt.encode()).digest()[:8], "little")
         rng = np.random.default_rng((seed, mix))
         L = self.ucfg.latent_size**2
-        plan = None
-        if payload.get("pas"):
-            plan = default_pas_plan(timesteps, self.n_up, self.l_sketch, self.l_refine)
+        quality = payload.get("quality", self.default_quality)
+        pol = self.policy.resolve(
+            timesteps,
+            quality=quality,
+            pas=bool(payload.get("pas")),
+            plan=self._parse_plan(payload, timesteps),
+        )
         with self._lock:
             rid = next(self._rid)
         return GenRequest(
@@ -121,8 +157,9 @@ class RequestFactory:
             ctx=rng.normal(size=(self.ucfg.ctx_len, self.ucfg.ctx_dim)).astype(np.float32) * 0.2,
             noise=rng.normal(size=(L, self.ucfg.in_channels)).astype(np.float32),
             timesteps=timesteps,
-            plan=plan,
+            plan=pol.plan,
             allow_cache=bool(payload.get("allow_cache", True)),
+            policy=pol,
         )
 
 

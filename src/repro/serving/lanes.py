@@ -26,7 +26,7 @@ Layout notes
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,7 @@ class LaneState(NamedTuple):
     t_prev: jax.Array  # [N, max_steps] successor timestep (-1 at the end)
     step: jax.Array  # [N] current step index into the plan
     n_steps: jax.Array  # [N] plan length; 0 marks an empty lane
+    thr: jax.Array  # [N, max_steps] per-step cache threshold (quality policy)
 
     @property
     def n_lanes(self) -> int:
@@ -70,12 +71,24 @@ class LanePlan(NamedTuple):
     ts: np.ndarray  # [max_steps] int32
     t_prev: np.ndarray  # [max_steps] int32
     n_steps: int
+    #: [max_steps] float32 per-step cache threshold (the quality policy's
+    #: per-request resolution; 0 = never reuse, bit-exact by construction)
+    thr: np.ndarray = np.zeros((0,), np.float32)
 
 
 def make_plan_arrays(
-    dcfg: DiffusionConfig, timesteps: int, plan: PASPlan | None, max_steps: int
+    dcfg: DiffusionConfig,
+    timesteps: int,
+    plan: PASPlan | None,
+    max_steps: int,
+    threshold: float | Callable[[np.ndarray], np.ndarray] = 0.0,
 ) -> LanePlan:
-    """Precompute one request's branch/timestep vectors, padded to max_steps."""
+    """Precompute one request's branch/timestep vectors, padded to max_steps.
+
+    ``threshold`` is the request's cache-threshold resolution: a scalar, or
+    a callable mapping the step's train timesteps to per-step thresholds
+    (how the quality policy expresses calibrated per-bucket thresholds).
+    """
     if timesteps > max_steps:
         raise ValueError(f"request wants {timesteps} steps, engine max is {max_steps}")
     stride = dcfg.timesteps_train // timesteps
@@ -85,13 +98,17 @@ def make_plan_arrays(
         branches = np.full((timesteps,), SM.FULL, np.int32)
     else:
         branches = np.asarray(SM.plan_to_branches(plan, timesteps))
+    thr = np.asarray(threshold(ts) if callable(threshold) else
+                     np.full((timesteps,), threshold), np.float32)
+    if thr.shape != (timesteps,):
+        raise ValueError(f"threshold resolver returned shape {thr.shape}, want ({timesteps},)")
 
-    def pad(a: np.ndarray) -> np.ndarray:
-        out = np.zeros((max_steps,), np.int32)
+    def pad(a: np.ndarray, dtype=np.int32) -> np.ndarray:
+        out = np.zeros((max_steps,), dtype)
         out[:timesteps] = a
         return out
 
-    return LanePlan(pad(branches), pad(ts), pad(t_prev), timesteps)
+    return LanePlan(pad(branches), pad(ts), pad(t_prev), timesteps, pad(thr, np.float32))
 
 
 def init_lanes(
@@ -118,6 +135,7 @@ def init_lanes(
         t_prev=z((n_lanes, max_steps), jnp.int32),
         step=z((n_lanes,), jnp.int32),
         n_steps=z((n_lanes,), jnp.int32),
+        thr=z((n_lanes, max_steps), jnp.float32),
     )
 
 
@@ -130,6 +148,7 @@ def admit(
     ts: jax.Array,  # [max_steps]
     t_prev: jax.Array,  # [max_steps]
     n_steps: jax.Array,  # scalar int32
+    thr: jax.Array | None = None,  # [max_steps] per-step cache threshold
 ) -> LaneState:
     """Scatter one request into an (empty) lane, resetting its sampler state."""
     n = state.n_lanes
@@ -145,6 +164,7 @@ def admit(
         t_prev=state.t_prev.at[lane].set(t_prev),
         step=state.step.at[lane].set(0),
         n_steps=state.n_steps.at[lane].set(n_steps),
+        thr=state.thr.at[lane].set(0.0 if thr is None else thr),
     )
 
 
@@ -185,15 +205,22 @@ def make_micro_step(
     ``cached=False`` — signature ``(state, b_star, sel)``: partial branches
     consume the lane's own captured features (the PR 1 behaviour).
 
-    ``cached=True`` — signature ``(state, b_star, sel, feat_src, cache)``:
-    ``feat_src`` is a per-lane int32 slot index into the device-resident
-    feature cache (-1 = own features); the SKETCH branch consumes the
-    selected entry and, for advanced lanes, the selection also becomes the
-    lane's sketch/refine cache, so the lane's later partial steps stay
-    consistent with whatever its last (possibly demoted) FULL step used.
-    With ``feat_src`` all -1 the selection is an exact passthrough — the
-    cache-enabled micro-step with no hits is bit-identical to ``cached=
-    False`` (the golden-latent harness pins this).
+    ``cached=True`` — signature ``(state, b_star, sel, feat_src, feat_dist,
+    cache)``: ``feat_src`` is a per-lane int32 slot index into the
+    device-resident feature cache (-1 = own features) and ``feat_dist`` the
+    probed slot's prompt-signature distance; the slot is consumed only
+    where ``feat_dist`` is *strictly* below the lane's per-step threshold
+    leaf (``state.thr`` — the quality policy's per-request resolution, so
+    the quality comparison happens on device, not against a python
+    scalar).  The partial branches consume the selected entry; on a SKETCH
+    step the selection also becomes the lane's sketch/refine cache (a
+    demoted FULL skipped its own refresh, so the slot is its feature
+    source of record), while a REFINE step consumes it for that step only
+    and leaves the lane's own captures in place.  With ``feat_src`` all -1
+    (or a threshold-0 lane, for which the strict inequality never passes)
+    the selection is an exact passthrough — the cache-enabled micro-step
+    with no hits is bit-identical to ``cached=False`` (the golden-latent
+    harness pins this).
 
     The step returns only the new state (no per-step host readback): the
     advance mask is deterministic from the host-known plans + cache
@@ -236,7 +263,13 @@ def make_micro_step(
                 ucfg, params, guidance, state.x, t, ctx2,
                 entry_step=e_rf, entry_feat=entry_rf,
             )
-            return eps, entry_sk, entry_rf
+            # a REFINE step never becomes the lane's feature source of
+            # record: a SKETCH->REFINE demotion consumes the slot for THIS
+            # step only, keeping the lane's own last-FULL captures for its
+            # later partial steps (each of which re-checks its own
+            # threshold) — unlike a demoted FULL, which skipped the refresh
+            # and so adopts the slot as its sketch/refine cache
+            return eps, state.f_sk, state.f_rf
 
         eps, f_sk_new, f_rf_new = jax.lax.switch(
             jnp.clip(b_star, 0, 2), (full_branch, sketch_branch, refine_branch), None
@@ -273,10 +306,16 @@ def make_micro_step(
         b_star: jax.Array,
         sel: jax.Array,
         feat_src: jax.Array,  # [N] int32 cache slot per lane, -1 = own
+        feat_dist: jax.Array,  # [N] f32 probed slot signature distance (inf = none)
         cache,  # CacheState pytree of [S, 2, ...] slots
     ) -> LaneState:
-        entry_sk = select_entry_features(state.f_sk, cache.f_sk, feat_src)
-        entry_rf = select_entry_features(state.f_rf, cache.f_rf, feat_src)
+        idx = jnp.minimum(state.step, state.thr.shape[1] - 1)
+        thr_t = jnp.take_along_axis(state.thr, idx[:, None], axis=1)[:, 0]
+        # strict inequality against the lane's own threshold leaf: a
+        # threshold-0 lane can never consume a slot, whatever the host says
+        use = (feat_src >= 0) & (feat_dist < thr_t)
+        entry_sk = select_entry_features(state.f_sk, cache.f_sk, feat_src, use)
+        entry_rf = select_entry_features(state.f_rf, cache.f_rf, feat_src, use)
         return _body(state, b_star, sel, entry_sk, entry_rf)
 
     return jax.jit(micro_step_cached, donate_argnums=(0,))
@@ -324,6 +363,7 @@ class ShardedLaneState(NamedTuple):
     t_prev: jax.Array  # [N, max_steps]
     step: jax.Array  # [N]
     n_steps: jax.Array  # [N]
+    thr: jax.Array  # [N, max_steps] per-step cache threshold (quality policy)
 
     @property
     def n_lanes(self) -> int:
@@ -366,6 +406,7 @@ def init_sharded_lanes(
         t_prev=z((n_lanes, max_steps), jnp.int32),
         step=z((n_lanes,), jnp.int32),
         n_steps=z((n_lanes,), jnp.int32),
+        thr=z((n_lanes, max_steps), jnp.float32),
     )
 
 
@@ -384,6 +425,7 @@ def make_sharded_admit(mesh):
         ts: jax.Array,
         t_prev: jax.Array,
         n_steps: jax.Array,
+        thr: jax.Array | None = None,
     ) -> ShardedLaneState:
         return ShardedLaneState(
             x=state.x.at[lane].set(noise),
@@ -397,6 +439,7 @@ def make_sharded_admit(mesh):
             t_prev=state.t_prev.at[lane].set(t_prev),
             step=state.step.at[lane].set(0),
             n_steps=state.n_steps.at[lane].set(n_steps),
+            thr=state.thr.at[lane].set(0.0 if thr is None else thr),
         )
 
     return jax.jit(admit_sharded, donate_argnums=(0,), out_shardings=sh)
@@ -416,16 +459,22 @@ def make_sharded_release(mesh):
     return jax.jit(release_sharded, donate_argnums=(0,), out_shardings=sh)
 
 
-def _select_local(own: jax.Array, slots: jax.Array, src: jax.Array) -> jax.Array:
+def _select_local(
+    own: jax.Array, slots: jax.Array, src: jax.Array, use: jax.Array | None = None
+) -> jax.Array:
     """Shard-local captured-vs-cached selection in the [P, 2, ...] layout.
 
     ``own`` [P, 2, L, C] lane features, ``slots`` [S_local, 2, L, C] the
-    shard's cache ring, ``src`` [P] local slot per lane (-1 = own).  Exact
-    passthrough when ``src`` is all -1 (the sharded golden test pins this).
+    shard's cache ring, ``src`` [P] local slot per lane (-1 = own), ``use``
+    an optional per-lane consume mask (defaults to ``src >= 0``) — the
+    sharded micro-step passes the device-side threshold comparison here.
+    Exact passthrough when nothing is used (the sharded golden test pins
+    this).
     """
     pick = slots[jnp.clip(src, 0, slots.shape[0] - 1)]  # [P, 2, L, C]
-    use = (src >= 0)[:, None, None, None]
-    return jnp.where(use, pick, own)
+    if use is None:
+        use = src >= 0
+    return jnp.where(use[:, None, None, None], pick, own)
 
 
 def make_sharded_micro_step(
@@ -446,11 +495,14 @@ def make_sharded_micro_step(
     host-mirrored per-lane advance mask (a lane advances iff its
     *effective* class equals its shard's chosen class).
 
-    ``cached=True`` adds ``(feat_src, cache)``: ``feat_src`` [n_lanes]
-    int32 holds *shard-local* slot indices (-1 = own features) and
-    ``cache`` is the sharded :class:`~repro.serving.cache.CacheState`
-    whose slot axis is partitioned over the same mesh, so the feature
-    gather never leaves the shard.
+    ``cached=True`` adds ``(feat_src, feat_dist, cache)``: ``feat_src``
+    [n_lanes] int32 holds *shard-local* slot indices (-1 = own features),
+    ``feat_dist`` [n_lanes] f32 the probed slots' signature distances —
+    consumed only strictly below the lane's per-step ``state.thr``
+    threshold leaf, mirroring the single-device micro-step — and ``cache``
+    is the sharded :class:`~repro.serving.cache.CacheState` whose slot
+    axis is partitioned over the same mesh, so the feature gather never
+    leaves the shard.
 
     ``params`` are passed explicitly (replicated spec) rather than closed
     over so the shard_map body stays closure-free over device arrays.
@@ -491,7 +543,10 @@ def make_sharded_micro_step(
                 ucfg, params, guidance, state.x, t, ctx2,
                 entry_step=e_rf, entry_feat=pair2(entry_rf),
             )
-            return eps, entry_sk, entry_rf
+            # as in the single-device micro-step: a (possibly demoted)
+            # REFINE step consumes the entry features for this step only —
+            # the lane's own captures stay its feature source of record
+            return eps, state.f_sk, state.f_rf
 
         eps, f_sk_new, f_rf_new = jax.lax.switch(
             jnp.clip(b_local[0], 0, 2), (full_branch, sketch_branch, refine_branch), None
@@ -537,19 +592,22 @@ def make_sharded_micro_step(
 
         return jax.jit(micro_step, donate_argnums=(0,))
 
-    def shard_body_cached(params, state, b_arr, sel, feat_src, cache):
-        entry_sk = _select_local(state.f_sk, cache.f_sk, feat_src)
-        entry_rf = _select_local(state.f_rf, cache.f_rf, feat_src)
+    def shard_body_cached(params, state, b_arr, sel, feat_src, feat_dist, cache):
+        idx = jnp.minimum(state.step, state.thr.shape[1] - 1)
+        thr_t = jnp.take_along_axis(state.thr, idx[:, None], axis=1)[:, 0]
+        use = (feat_src >= 0) & (feat_dist < thr_t)
+        entry_sk = _select_local(state.f_sk, cache.f_sk, feat_src, use)
+        entry_rf = _select_local(state.f_rf, cache.f_rf, feat_src, use)
         return local_body(params, state, b_arr, sel, entry_sk, entry_rf)
 
     mapped_cached = shard_map(
         shard_body_cached, mesh=mesh,
-        in_specs=(repl, lane, lane, lane, lane, lane),
+        in_specs=(repl, lane, lane, lane, lane, lane, lane),
         out_specs=lane,
         check_rep=False,
     )
 
-    def micro_step_cached(state, params, b_arr, sel, feat_src, cache):
-        return mapped_cached(params, state, b_arr, sel, feat_src, cache)
+    def micro_step_cached(state, params, b_arr, sel, feat_src, feat_dist, cache):
+        return mapped_cached(params, state, b_arr, sel, feat_src, feat_dist, cache)
 
     return jax.jit(micro_step_cached, donate_argnums=(0,))

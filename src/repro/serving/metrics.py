@@ -26,8 +26,16 @@ class ServingMetrics:
     lane_steps_advanced: int = 0
     #: FULL lane-steps actually executed (each one a full U-Net pass)
     full_steps: int = 0
+    #: SKETCH / REFINE lane-steps actually executed (partial U-Net passes,
+    #: demoted steps included — executed-class accounting for /stats)
+    sketch_steps: int = 0
+    refine_steps: int = 0
     #: planned-FULL lane-steps served from the feature cache as SKETCH
     demoted_steps: int = 0
+    #: planned-SKETCH lane-steps served from the feature cache as REFINE
+    demoted_refine_steps: int = 0
+    #: submitted requests per resolved quality tier ("full"/"pas" = legacy)
+    quality_mix: dict[str, int] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
 
     def record_step(
@@ -37,17 +45,27 @@ class ServingMetrics:
         n_advanced: int,
         n_full: int = 0,
         n_demoted: int = 0,
+        n_sketch: int = 0,
+        n_refine: int = 0,
+        n_demoted_refine: int = 0,
         shard_active: Sequence[int] | None = None,
     ) -> None:
         self.micro_steps += 1
         self.lane_steps_advanced += n_advanced
         self.full_steps += n_full
+        self.sketch_steps += n_sketch
+        self.refine_steps += n_refine
         self.demoted_steps += n_demoted
+        self.demoted_refine_steps += n_demoted_refine
         self.occupancy.append(n_active / max(n_lanes, 1))
         if n_active:
             self.advance_eff.append(n_advanced / n_active)
         if shard_active is not None:
             self.shard_active.append(list(shard_active))
+
+    def record_submission(self, tier: str) -> None:
+        """Count one submitted request under its resolved quality tier."""
+        self.quality_mix[tier] = self.quality_mix.get(tier, 0) + 1
 
     def record_completion(self, latency_s: float, queue_wait_s: float) -> None:
         self.latencies_s.append(latency_s)
@@ -74,11 +92,15 @@ class ServingMetrics:
             if self.advance_eff
             else 0.0,
             "full_steps": self.full_steps,
+            "sketch_steps": self.sketch_steps,
+            "refine_steps": self.refine_steps,
             "demoted_full_steps": self.demoted_steps,
+            "demoted_sketch_steps": self.demoted_refine_steps,
             # fraction of planned FULL lane-steps served from the cache
             "cache_hit_rate": round(
                 self.demoted_steps / max(self.full_steps + self.demoted_steps, 1), 3
             ),
+            "quality_mix": dict(sorted(self.quality_mix.items())),
             **self._shard_summary(),
         }
 

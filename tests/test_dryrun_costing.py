@@ -8,12 +8,12 @@ import pytest
 
 pytest.importorskip("jax")
 
+from repro.configs import get_lm_config  # noqa: E402
 from repro.launch.dryrun import (  # noqa: E402
     _n_scan_units,
     collective_bytes_from_hlo,
     collective_wire_seconds,
 )
-from repro.configs import get_lm_config  # noqa: E402
 
 
 HLO_SAMPLE = """

@@ -4,12 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.common.types import LMConfig
 from repro.configs import get_lm_config
 from repro.core import lm_skip as LS
 from repro.models import transformer as T
-
-
-from repro.common.types import LMConfig
 
 pytestmark = pytest.mark.slow  # ~100s: full decode loops on a 6-layer LM
 

@@ -288,6 +288,59 @@ def test_default_pas_plan_valid_at_tiny_step_counts():
         assert 0 < plan.t_complete <= plan.t_sketch <= t
 
 
+def test_request_factory_quality_knobs():
+    f = _factory()
+    # quality=exact resolves to today's default path: all-FULL plan,
+    # identical tensors => identical latent digest downstream
+    r_default = f.make({"prompt": "p", "seed": 3, "timesteps": 4})
+    r_exact = f.make({"prompt": "p", "seed": 3, "timesteps": 4, "quality": "exact"})
+    np.testing.assert_array_equal(r_default.ctx, r_exact.ctx)
+    np.testing.assert_array_equal(r_default.noise, r_exact.noise)
+    assert r_default.plan is None and r_exact.plan is None
+    assert r_exact.policy.cache_threshold == 0.0
+    assert r_exact.quality_tier == "exact" and r_default.quality_tier == "full"
+    # tiers pick plans; continuous quality parses too
+    r_draft = f.make({"timesteps": 6, "quality": "draft"})
+    assert r_draft.plan is not None and r_draft.policy.refine_demotions
+    assert f.make({"timesteps": 6, "quality": 0.5}).quality_tier == "balanced"
+    # explicit plan object overrides the tier shape (engine geometry default)
+    r_plan = f.make({
+        "timesteps": 6, "quality": "high",
+        "plan": {"t_sketch": 3, "t_complete": 1, "t_sparse": 2},
+    })
+    assert (r_plan.plan.t_sketch, r_plan.plan.l_sketch) == (3, CFG.l_sketch)
+    for bad in (
+        {"quality": "ultra"},
+        {"quality": 1.5},
+        {"quality": "exact", "plan": {"t_sketch": 2, "t_complete": 1, "t_sparse": 2}},
+        {"plan": {"t_sketch": 2}},
+        {"plan": {"t_sketch": 2, "t_complete": 1, "t_sparse": 2, "bogus": 1}},
+    ):
+        with pytest.raises(ValueError):
+            f.make(dict(bad, timesteps=4))
+
+
+def test_http_exact_quality_digest_matches_default(engine):
+    """Acceptance: a quality=exact payload streams a latent digest
+    bit-equal to the same payload with no quality field (today's path)."""
+    async def scenario():
+        driver = EngineDriver(engine, max_inflight=8).start()
+        frontend = HTTPFrontend(driver, _factory(), "127.0.0.1", 0)
+        await frontend.start()
+        serve_task = asyncio.create_task(frontend.serve_until_shutdown())
+        client = FrontendClient("127.0.0.1", frontend.port)
+        base = await client.generate(prompt="digest", seed=9, timesteps=4)
+        exact = await client.generate(
+            prompt="digest", seed=9, timesteps=4, quality="exact"
+        )
+        assert base["event"] == exact["event"] == "done"
+        assert base["latent_digest"] == exact["latent_digest"]
+        await client.shutdown()
+        await serve_task
+
+    asyncio.run(scenario())
+
+
 # ---------------------------------------------------------------------------
 # CLI (slow: subprocess servers pay a fresh jit each)
 # ---------------------------------------------------------------------------

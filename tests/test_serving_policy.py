@@ -1,0 +1,187 @@
+"""Quality-policy resolver: tiers, continuous quality, calibration profiles.
+
+Host-only resolution logic plus the resolver's contracts with the engine:
+``exact`` (and the legacy no-knob path) must reproduce today's defaults
+bit-for-bit at the plan/threshold level, tier plans must order by planned
+FULL-step count (the monotone-reduction acceptance criterion), and
+profile-derived bucket factors must loosen stable buckets and tighten
+high-shift ones.
+"""
+import numpy as np
+import pytest
+
+from repro.common.types import DiffusionConfig, PASPlan
+from repro.core.sampler import FULL
+from repro.core.shift_score import ShiftProfile, load_profile, save_profile
+from repro.serving.lanes import make_plan_arrays
+from repro.serving.policy import (
+    QualityPolicy,
+    TIER_QUALITY,
+    default_pas_plan,
+    parse_quality,
+    profile_bucket_factors,
+    tier_of_quality,
+)
+
+N_UP = 6
+DCFG = DiffusionConfig(timesteps_sample=8)
+
+
+def _policy(**kw):
+    return QualityPolicy(N_UP, base_threshold=0.2, **kw)
+
+
+def _planned_full(plan: PASPlan | None, timesteps: int) -> int:
+    if plan is None:
+        return timesteps
+    return sum(1 for b in plan.schedule(timesteps) if b < 0)
+
+
+# ---------------------------------------------------------------------------
+# Knob parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_quality_tiers_and_numbers():
+    for name, q in TIER_QUALITY.items():
+        assert parse_quality(name) == q
+        assert tier_of_quality(q) == name
+    assert parse_quality("0.5") == 0.5
+    assert parse_quality(1) == 1.0
+
+
+@pytest.mark.parametrize("bad", ["ultra", "", -0.1, 1.5, "nan"])
+def test_parse_quality_rejects_bad_knobs(bad):
+    with pytest.raises(ValueError):
+        q = parse_quality(bad)
+        if q != q:  # nan parses as float but must not slip through
+            raise ValueError("nan")
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_resolution_matches_todays_defaults():
+    """No quality knob => exactly today's behaviour: `pas` picks the stock
+    plan, the engine-global threshold applies (threshold None sentinel)."""
+    p = _policy()
+    for timesteps in (1, 4, 8, 20):
+        r = p.resolve(timesteps, pas=True)
+        assert r.plan == default_pas_plan(timesteps, N_UP)
+        assert r.cache_threshold is None and r.tier == "pas"
+        r = p.resolve(timesteps)
+        assert r.plan is None and r.cache_threshold is None and r.tier == "full"
+        assert not r.refine_demotions
+
+
+def test_exact_is_all_full_threshold_zero():
+    r = _policy().resolve(8, quality="exact")
+    assert r.plan is None
+    assert r.cache_threshold == 0.0
+    assert not r.refine_demotions
+    assert r.threshold_for(500, default=0.3) == 0.0
+    with pytest.raises(ValueError):
+        _policy().resolve(8, quality="exact", plan=default_pas_plan(8, N_UP))
+
+
+def test_tier_plans_order_by_planned_full_steps():
+    """draft < balanced < high < exact planned FULL steps, aggregated over
+    the serving step-count range (the bench monotonicity backbone)."""
+    p = _policy()
+    totals = {}
+    for tier in ("draft", "balanced", "high", "exact"):
+        totals[tier] = sum(
+            _planned_full(p.resolve(t, quality=tier).plan, t) for t in range(4, 9)
+        )
+    assert totals["draft"] < totals["balanced"] < totals["high"] < totals["exact"]
+
+
+def test_tier_plans_validate_down_to_one_step():
+    p = _policy()
+    for tier in ("draft", "balanced", "high", "exact"):
+        for t in range(1, 12):
+            plan = p.resolve(t, quality=tier).plan
+            if plan is not None:
+                plan.validate(t, N_UP)
+
+
+def test_threshold_scales_down_with_quality():
+    p = _policy()
+    thr = [p.resolve(8, quality=q).threshold_for(500, default=0.2)
+           for q in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert thr == sorted(thr, reverse=True)
+    assert thr[-1] == 0.0
+    # balanced (q=0.5) sits exactly at the policy base threshold
+    assert thr[2] == pytest.approx(0.2, rel=1e-6)
+
+
+def test_explicit_plan_overrides_tier_shape():
+    plan = PASPlan(t_sketch=6, t_complete=1, t_sparse=2, l_sketch=3, l_refine=2)
+    r = _policy().resolve(8, quality="draft", plan=plan)
+    assert r.plan == plan
+    assert r.cache_threshold is not None and r.cache_threshold > 0
+
+
+# ---------------------------------------------------------------------------
+# Calibration profiles
+# ---------------------------------------------------------------------------
+
+
+def _profile(scores: np.ndarray) -> ShiftProfile:
+    return ShiftProfile(scores=scores, outlier_blocks=())
+
+
+def test_profile_bucket_factors_track_shift_scores():
+    """Stable (low-shift) buckets loosen the threshold, high-shift buckets
+    tighten it; uncalibrated buckets stay at 1.0."""
+    # 8 calibration steps over t_train=1000 (ts = 875, 750, ..., 0):
+    # early (large t) steps shift a lot, late steps barely move
+    t_steps = 8
+    scores = np.linspace(1.0, 0.0, t_steps - 1)[:, None] * np.ones((1, 3))
+    factors = profile_bucket_factors(_profile(scores), t_train=1000, t_bucket=125)
+    assert len(factors) == 8
+    assert factors[0] > 1.0  # t in [0, 125): late denoise, stable => looser
+    assert factors[-1] < 1.0 or factors[-1] == 1.0  # earliest bucket tight/uncovered
+    covered = [f for f in factors if f != 1.0]
+    assert covered, "no bucket picked up calibration data"
+    # monotone trend: stability increases toward t=0 => factors decrease with t
+    assert factors[0] >= factors[3] >= factors[6]
+
+
+def test_profile_roundtrip_and_policy_thresholds(tmp_path):
+    t_steps = 8
+    scores = np.linspace(1.0, 0.0, t_steps - 1)[:, None] * np.ones((1, 3))
+    ts = (np.arange(t_steps) * 125)[::-1]
+    path = str(tmp_path / "profile.npz")
+    save_profile(path, _profile(scores), ts=ts)
+    profile, loaded_ts = load_profile(path)
+    np.testing.assert_array_equal(loaded_ts, ts)
+    np.testing.assert_allclose(profile.scores, scores, rtol=1e-6)
+
+    p = _policy(profile=profile, profile_ts=loaded_ts)
+    r = p.resolve(8, quality="balanced")
+    lo_t = r.threshold_for(10, default=0.2)  # stable late-denoise bucket
+    hi_t = r.threshold_for(990, default=0.2)  # high-shift early bucket
+    assert lo_t > hi_t
+    # exact stays at zero whatever the profile says
+    assert p.resolve(8, quality="exact").threshold_for(10, default=0.2) == 0.0
+
+
+def test_threshold_spec_feeds_per_step_lane_thresholds():
+    """The resolver's thresholds land per plan step in LanePlan.thr, and
+    legacy requests get a flat engine-default vector."""
+    p = _policy()
+    r = p.resolve(8, quality="draft")
+    lp = make_plan_arrays(DCFG, 8, r.plan, 10, threshold=r.threshold_spec(0.15))
+    assert lp.thr.shape == (10,)
+    assert (lp.thr[:8] > 0).all() and (lp.thr[8:] == 0).all()
+    legacy = p.resolve(8)
+    lp2 = make_plan_arrays(DCFG, 8, legacy.plan, 10, threshold=legacy.threshold_spec(0.15))
+    np.testing.assert_allclose(lp2.thr[:8], 0.15, rtol=1e-6)
+    # exact => hard zeros => the strict-inequality guarantee applies per step
+    r0 = p.resolve(8, quality="exact")
+    lp3 = make_plan_arrays(DCFG, 8, r0.plan, 10, threshold=r0.threshold_spec(0.15))
+    assert (lp3.thr == 0).all()
+    assert (lp3.branches[:8] == FULL).all()

@@ -1,0 +1,197 @@
+"""Conditioned-pipeline scenarios benchmark: variation fan-out cache
+sharing + img2img truncation savings + full scenario-stream serving.
+
+Three phases against the toy serving config (wide cache time-bucket so
+sibling probes land; all gates are count ratios, portable across machine
+speeds):
+
+1. **independent** — the K variation members submitted as K *independent*
+   requests (one cold engine+cache per submission): every planned FULL
+   step executes in full.  This is what K users pasting the same prompt
+   cost without fan-out.
+2. **group** — the same K members as ONE variation request: co-resident
+   lanes, admitted together, sharing FULL-step feature captures by
+   construction (sibling prompt signatures are identical, so cross-mode
+   probes hit at distance 0).  The headline acceptance gates:
+
+   * ``variation_hit_rate``       = demoted / (full + demoted) planned-FULL
+     steps inside the group run;
+   * ``variation_full_reduction`` = 1 - group FULL steps / independent
+     FULL steps — the cache-driven FULL-step reduction of fan-out.
+
+3. **scenarios** — the full conditioned stream (img2img at two strengths,
+   inpaint with identity and half masks, the K=3 variations) served by one
+   engine: completion must be total, and the img2img members must execute
+   exactly their strength-truncated step counts
+   (``img2img_step_savings`` = 1 - executed / base, deterministic).
+
+``--json PATH`` writes ``BENCH_scenarios.json`` in the bench-trajectory
+shape (ratio ``gates`` vs ``benchmarks/baselines/BENCH_scenarios.json``
+via ``tools/compare_bench.py``, absolute ``headline`` numbers riding
+along).
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_scenarios.py           # full run
+  PYTHONPATH=src:. python benchmarks/bench_scenarios.py --smoke   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import emit
+from repro.serving import scenarios as S
+from repro.serving.engine import DiffusionEngine, EngineConfig
+from repro.serving.frontend import RequestFactory
+from repro.serving.metrics import ServingMetrics
+
+
+def _cfg(lanes: int, t_bucket: int) -> EngineConfig:
+    return EngineConfig(
+        n_lanes=lanes,
+        max_steps=8,
+        l_sketch=S.L_SKETCH,
+        l_refine=S.L_REFINE,
+        decode_images=False,
+        cache_mode="cross",
+        cache_threshold=0.3,
+        cache_t_bucket=t_bucket,
+    )
+
+
+def _fresh_engine(params, cfg) -> DiffusionEngine:
+    eng = DiffusionEngine(S.UCFG, S.DCFG, params, None, cfg)
+    eng.metrics = ServingMetrics()
+    return eng
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variants", type=int, default=4, help="fan-out width K")
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--timesteps", type=int, default=6, help="base schedule length")
+    ap.add_argument(
+        "--t-bucket", type=int, default=1000,
+        help="cache time-bucket width (wide = every step bucket-compatible)",
+    )
+    ap.add_argument(
+        "--json", type=str, default=None, metavar="PATH",
+        help="write the benchmark-trajectory JSON (BENCH_scenarios.json)",
+    )
+    ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    if args.smoke:
+        args.variants, args.lanes = 3, 4
+
+    k = args.variants
+    if k > args.lanes:
+        raise SystemExit(f"--variants {k} must fit co-resident in --lanes {args.lanes}")
+    cfg = _cfg(args.lanes, args.t_bucket)
+    params = S.golden_params()
+    factory = RequestFactory(S.UCFG, S.DCFG, cfg)
+    group_payload = {
+        "task": "variations", "prompt": "bench", "seed": args.seed,
+        "timesteps": args.timesteps, "variants": k, "quality": "high",
+    }
+
+    # -- phase 1: K independent submissions (cold engine+cache each) ---------
+    full_ind = 0
+    t0 = time.perf_counter()
+    for req in factory.build(group_payload)[0]:
+        eng = _fresh_engine(params, cfg)
+        done, _ = eng.run([req])
+        assert len(done) == 1
+        full_ind += eng.metrics.full_steps
+    wall_ind = time.perf_counter() - t0
+    emit("scenarios", "independent/full_steps", full_ind, "steps",
+         f"{k} cold submissions of one prompt")
+
+    # -- phase 2: the same K members as one co-resident variation group ------
+    eng = _fresh_engine(params, cfg)
+    reqs, _, _ = factory.build(group_payload)
+    t0 = time.perf_counter()
+    done, _ = eng.run(reqs)
+    wall_grp = time.perf_counter() - t0
+    assert len(done) == k, "variation member lost"
+    full_grp = eng.metrics.full_steps
+    demoted_grp = eng.metrics.demoted_steps
+    hit_rate = demoted_grp / max(full_grp + demoted_grp, 1)
+    full_reduction = 1.0 - full_grp / max(full_ind, 1)
+    emit("scenarios", "group/full_steps", full_grp, "steps")
+    emit("scenarios", "group/demoted_steps", demoted_grp, "steps",
+         "planned-FULL served from sibling captures")
+    emit("scenarios", "acceptance/variation_hit_rate", round(hit_rate, 3), "",
+         "group planned-FULL steps served from cache")
+    emit("scenarios", "acceptance/variation_full_reduction", round(full_reduction, 3),
+         "", "FULL-step reduction vs independent submissions")
+
+    # -- phase 3: the full conditioned scenario stream -----------------------
+    eng = _fresh_engine(params, cfg)
+    named = S.scenario_requests()
+    t0 = time.perf_counter()
+    done, summary = eng.run([req for _, req in named])
+    wall_scn = time.perf_counter() - t0
+    completion = len(done) / len(named)
+    # the engine advanced exactly the truncated schedules, nothing more:
+    # total lane steps == sum of *executed* (strength-resolved) step counts
+    want_steps = sum(req.timesteps for _, req in named)
+    got_steps = eng.metrics.lane_steps_advanced
+    assert got_steps == want_steps, (
+        f"stream advanced {got_steps} lane steps, truncated schedules sum to "
+        f"{want_steps}"
+    )
+    exec_steps = base_steps = 0
+    for name, req in named:
+        if not name.startswith("img2img"):
+            continue
+        exec_steps += req.timesteps
+        base_steps += req.base_timesteps or req.timesteps
+    step_savings = 1.0 - exec_steps / max(base_steps, 1)
+    emit("scenarios", "stream/completed", len(done), "req", f"of {len(named)}")
+    emit("scenarios", "stream/throughput_req_s", summary["throughput_req_s"], "req/s")
+    emit("scenarios", "acceptance/img2img_step_savings", round(step_savings, 3), "",
+         "1 - executed/base over the img2img scenarios (strength truncation)")
+
+    if args.json:
+        out = {
+            "bench": "scenarios",
+            "config": {
+                "variants": k,
+                "lanes": args.lanes,
+                "timesteps": args.timesteps,
+                "t_bucket": args.t_bucket,
+                "cache_threshold": cfg.cache_threshold,
+                "seed": args.seed,
+            },
+            # ratio gates: count-based, machine-speed independent
+            "gates": {
+                "variation_hit_rate": round(hit_rate, 3),
+                "variation_full_reduction": round(full_reduction, 3),
+                "img2img_step_savings": round(step_savings, 3),
+                "scenario_completion_ratio": round(completion, 3),
+            },
+            "headline": {
+                "independent_full_steps": full_ind,
+                "group_full_steps": full_grp,
+                "group_demoted_steps": demoted_grp,
+                "independent_wall_s": round(wall_ind, 3),
+                "group_wall_s": round(wall_grp, 3),
+                "scenario_stream_wall_s": round(wall_scn, 3),
+                "scenario_throughput_req_s": summary["throughput_req_s"],
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        emit("scenarios", "trajectory_json", args.json, "", "written")
+
+    assert completion == 1.0, "scenario stream lost requests"
+    assert full_grp < full_ind, (
+        f"variation group must execute fewer FULL steps than {k} independent "
+        f"submissions (got {full_grp} vs {full_ind})"
+    )
+
+
+if __name__ == "__main__":
+    main()

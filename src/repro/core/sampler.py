@@ -98,6 +98,131 @@ def feat_shape(ucfg: UNetConfig, entry_step: int, batch: int) -> tuple[int, ...]
 _feat_shape = feat_shape  # back-compat alias (pre-cache callers)
 
 
+def truncated_timesteps(dcfg: DiffusionConfig, base: int, n_exec: int) -> jnp.ndarray:
+    """The last ``n_exec`` timesteps of a ``base``-step sampling schedule.
+
+    This is the img2img schedule resolution: ``strength`` picks how many of
+    the base schedule's *final* steps actually execute, while the stride —
+    and therefore the train timesteps each executed step sees — stays that
+    of the untruncated schedule.  ``n_exec == base`` is the stock schedule.
+    """
+    if not 1 <= n_exec <= base:
+        raise ValueError(f"truncation wants {n_exec} of {base} steps")
+    stride = dcfg.timesteps_train // base
+    ts = (jnp.arange(base) * stride)[::-1].astype(jnp.int32)
+    return ts[base - n_exec:]
+
+
+def pas_denoise_scheduled(
+    ucfg: UNetConfig,
+    dcfg: DiffusionConfig,
+    params: Params,
+    plan: PASPlan | None,
+    x_t: jax.Array,  # [B, L, C] entry latent (noise, or a q_sampled init)
+    ctx_cond: jax.Array,
+    ctx_uncond: jax.Array,
+    *,
+    ts: jax.Array | None = None,  # explicit descending timestep vector
+    mask: jax.Array | None = None,  # [B, L, 1] inpaint mask (1 = generate)
+    x_init: jax.Array | None = None,  # [B, L, C] known latent under the mask
+    noise0: jax.Array | None = None,  # [B, L, C] fixed noise for the known region
+) -> jax.Array:
+    """Straight-line PAS sampling over an *explicit* timestep schedule.
+
+    Generalizes :func:`pas_denoise` to the conditioned serving scenarios —
+    the reference implementation the engine's differential tests compare
+    against:
+
+    * **img2img**: pass the strength-truncated schedule from
+      :func:`truncated_timesteps` and an entry latent seeded with
+      :func:`repro.models.diffusion.q_sample` at ``ts[0]``;
+    * **inpainting**: pass ``mask`` / ``x_init`` / ``noise0`` — after every
+      scheduler step the masked-out region is replaced by the known latent
+      re-noised to that step's target timestep (``t_prev < 0`` resolves to
+      the clean ``x_init``).  The blend selects the denoised latent
+      *exactly* where ``mask >= 1``, so a full-ones mask is structurally
+      the identity.
+
+    ``ts=None`` with no mask is exactly the :func:`pas_denoise` loop (same
+    math; the scan carries two extra — constant — leaves when masked).
+    """
+    sched = D.make_schedule(dcfg)
+    if ts is None:
+        ts = D.sample_timesteps(dcfg)
+    ts = jnp.asarray(ts, jnp.int32)
+    total = int(ts.shape[0])
+    t_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+
+    inpaint = mask is not None
+    if inpaint:
+        mask = jnp.asarray(mask, x_t.dtype)
+        x_init = jnp.zeros_like(x_t) if x_init is None else jnp.asarray(x_init, x_t.dtype)
+        noise0 = jnp.zeros_like(x_t) if noise0 is None else jnp.asarray(noise0, x_t.dtype)
+
+    b = x_t.shape[0]
+    b2 = 2 * b
+    guidance = dcfg.guidance_scale
+
+    refresh_cache = plan is not None
+    if plan is None:
+        branches = jnp.zeros((total,), jnp.int32)
+        plan = PASPlan(total, total, 1, 1, 1)
+    else:
+        branches = plan_to_branches(plan, total)
+    e_sk, e_rf = _entry_steps(ucfg, plan)
+
+    ctx2 = jnp.concatenate([ctx_cond, ctx_uncond], axis=0)
+
+    def run_unet(x, t, entry_step, entry_feat, capture):
+        return cfg_unet_step(
+            ucfg, params, guidance, x, t, ctx2,
+            entry_step=entry_step, entry_feat=entry_feat, capture=capture,
+        )
+
+    f_sk0 = jnp.zeros(_feat_shape(ucfg, e_sk, b2), x_t.dtype)
+    f_rf0 = jnp.zeros(_feat_shape(ucfg, e_rf, b2), x_t.dtype)
+
+    def full_branch(op):
+        x, t, f_sk, f_rf = op
+        if not refresh_cache:
+            eps, _ = run_unet(x, t, 0, None, capture=())
+            return eps, f_sk, f_rf
+        eps, cap = run_unet(x, t, 0, None, capture=(e_sk, e_rf))
+        return eps, cap[e_sk], cap[e_rf]
+
+    def sketch_branch(op):
+        x, t, f_sk, f_rf = op
+        eps, _ = run_unet(x, t, e_sk, f_sk, capture=())
+        return eps, f_sk, f_rf
+
+    def refine_branch(op):
+        x, t, f_sk, f_rf = op
+        eps, _ = run_unet(x, t, e_rf, f_rf, capture=())
+        return eps, f_sk, f_rf
+
+    def step(carry, inp):
+        x, pndm, f_sk, f_rf = carry
+        t, tp, br = inp
+        eps, f_sk, f_rf = jax.lax.switch(
+            br, (full_branch, sketch_branch, refine_branch), (x, t, f_sk, f_rf)
+        )
+        if dcfg.scheduler == "pndm":
+            x, pndm = D.pndm_step(sched, pndm, x, eps, t, tp)
+        else:
+            x = D.ddim_step(sched, x, eps, t, tp)
+        if inpaint:
+            # re-noise the known region to the step's target timestep and
+            # blend; jnp.where keeps a full-ones mask structurally exact
+            ab = jnp.where(tp >= 0, sched.alphas_cumprod[jnp.maximum(tp, 0)], 1.0)
+            known = jnp.sqrt(ab) * x_init + jnp.sqrt(1.0 - ab) * noise0
+            x = jnp.where(mask >= 1.0, x, mask * x + (1.0 - mask) * known)
+        return (x, pndm, f_sk, f_rf), None
+
+    pndm0 = D.pndm_init(x_t.shape, x_t.dtype)
+    (x0, _, _, _), _ = jax.lax.scan(step, (x_t, pndm0, f_sk0, f_rf0), (ts, t_prev, branches))
+    return x0
+
+
 def pas_denoise(
     ucfg: UNetConfig,
     dcfg: DiffusionConfig,

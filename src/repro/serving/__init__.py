@@ -11,9 +11,14 @@
 * ``engine``    — the continuous-batching event loop (single-device +
   mesh-sharded) + static baseline
 * ``driver``    — dedicated engine thread: thread-safe bounded submission,
-  per-request event streams, cancellation, graceful drain
+  per-request event streams, cancellation, graceful drain, variation groups
+* ``schema``    — the v2 generate-request schema: tagged task union
+  (txt2img | img2img | inpaint | variations), typed validation errors,
+  v1 compat shim
 * ``frontend``  — asyncio HTTP server over the driver (chunked NDJSON
   progress streaming, backpressure as 429)
+* ``scenarios`` — toy-model conditioned-pipeline scenarios (img2img,
+  inpaint, variations) + golden-latent fixtures for them
 * ``client``    — async HTTP client + Poisson/closed-loop load generator
 * ``metrics``   — latency percentiles, throughput, lane occupancy/balance,
   hit rate
@@ -56,6 +61,13 @@ from repro.serving.scheduler import (
     FIFOScheduler,
     PlanAwareScheduler,
 )
+from repro.serving.schema import (
+    RequestSpec,
+    SchemaError,
+    is_v1,
+    parse_request,
+    upgrade_v1,
+)
 
 __all__ = [
     "CacheAwareScheduler",
@@ -72,7 +84,9 @@ __all__ = [
     "PlanAwareScheduler",
     "QualityPolicy",
     "RequestFactory",
+    "RequestSpec",
     "ResolvedPolicy",
+    "SchemaError",
     "ServingMetrics",
     "TIER_QUALITY",
     "ShardedDiffusionEngine",
@@ -82,11 +96,14 @@ __all__ = [
     "StaticServer",
     "SubmitRejected",
     "default_pas_plan",
+    "is_v1",
     "latent_digest",
     "make_plan_arrays",
     "make_serving_engine",
     "parse_quality",
+    "parse_request",
     "prompt_signature",
     "serve_static",
     "signature_distance",
+    "upgrade_v1",
 ]

@@ -155,6 +155,11 @@ class SlotRing:
         self.bucket = np.full((s,), -1, np.int64)
         self.sig = np.zeros((s, self.sig_dim), np.float32)
         self.rid = np.full((s,), -1, np.int64)
+        #: schedule offset (base - executed steps) the slot was captured
+        #: under: a truncated img2img schedule visits the same train
+        #: timesteps as the stock one but with different PNDM history, so
+        #: warm hits never cross incompatible truncations
+        self.offset = np.zeros((s,), np.int64)
         self.valid = np.zeros((s,), bool)
         self.last_use = np.zeros((s,), np.int64)
         self._tick = 0
@@ -179,18 +184,21 @@ class SlotRing:
     # -- lookup --------------------------------------------------------------
 
     def probe_distance(
-        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None,
+        offset: int = 0,
     ) -> tuple[int, float] | None:
-        """Best matching warm slot for (timestep, signature) with its
-        float32 signature distance, or None.
+        """Best matching warm slot for (timestep, signature, schedule
+        offset) with its float32 signature distance, or None.
 
         ``threshold`` is the *per-request* hit bound (the quality policy's
-        resolution); None falls back to the ring default.  Read-only: no
-        counters, no LRU touch (the admission policy uses this to score
-        queued requests without perturbing eviction order).
+        resolution); None falls back to the ring default.  ``offset`` is
+        the request's schedule truncation key — only slots captured under
+        the same truncation match.  Read-only: no counters, no LRU touch
+        (the admission policy uses this to score queued requests without
+        perturbing eviction order).
         """
         thr = self.threshold if threshold is None else threshold
-        mask = self.valid & (self.bucket == self.bucket_of(t))
+        mask = self.valid & (self.bucket == self.bucket_of(t)) & (self.offset == offset)
         # disjoint scopes: intra = own slots only, cross = other requests'
         # slots only (a request's own slot sits at distance 0 and would
         # trivially pass any positive threshold)
@@ -207,14 +215,16 @@ class SlotRing:
         return (best, float(d[best])) if d[best] < thr else None
 
     def probe(
-        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None,
+        offset: int = 0,
     ) -> int | None:
         """Slot-only convenience over :meth:`probe_distance`."""
-        hit = self.probe_distance(t, sig, rid, threshold)
+        hit = self.probe_distance(t, sig, rid, threshold, offset)
         return None if hit is None else hit[0]
 
     def lookup(
-        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None,
+        offset: int = 0,
     ) -> int | None:
         """Probe + hit/miss accounting + LRU touch, as one call.
 
@@ -224,7 +234,7 @@ class SlotRing:
         :meth:`note_miss`), so branch-vote losers neither skew the stats
         nor keep slots artificially warm.
         """
-        slot = self.probe(t, sig, rid, threshold)
+        slot = self.probe(t, sig, rid, threshold, offset)
         if slot is not None:
             self.note_hit(slot)
         else:
@@ -260,22 +270,26 @@ class SlotRing:
         if lp is None or sig is None or not self.valid.any():
             return 0.0
         thr = getattr(lp, "thr", None)
+        off = int(getattr(req, "sched_offset", 0))
         hits, fulls = 0, 0
         for i in range(lp.n_steps):
             if lp.branches[i] != SM.FULL:
                 continue
             fulls += 1
             step_thr = None if thr is None or i >= len(thr) else float(thr[i])
-            if self.probe(int(lp.ts[i]), sig, getattr(req, "rid", -1), step_thr) is not None:
+            if self.probe(
+                int(lp.ts[i]), sig, getattr(req, "rid", -1), step_thr, off
+            ) is not None:
                 hits += 1
         return hits / max(fulls, 1)
 
     # -- insert --------------------------------------------------------------
 
     def reserve(
-        self, t: int, sig: np.ndarray, rid: int, exclude: set[int] | tuple = ()
+        self, t: int, sig: np.ndarray, rid: int, exclude: set[int] | tuple = (),
+        offset: int = 0,
     ) -> int | None:
-        """Claim a slot for (t, sig, rid) and update the host keys.
+        """Claim a slot for (t, sig, rid, offset) and update the host keys.
 
         Slot choice: a valid slot already holding (rid, bucket) is refreshed
         in place (a request's newer capture supersedes its older one in the
@@ -294,7 +308,10 @@ class SlotRing:
         free = np.ones((self.n_slots,), bool)
         for s in exclude:
             free[s] = False
-        same = np.nonzero(free & self.valid & (self.rid == rid) & (self.bucket == b))[0]
+        same = np.nonzero(
+            free & self.valid & (self.rid == rid) & (self.bucket == b)
+            & (self.offset == offset)
+        )[0]
         if same.size:
             slot = int(same[0])
         else:
@@ -310,6 +327,7 @@ class SlotRing:
         self.bucket[slot] = b
         self.sig[slot] = np.asarray(sig, np.float32)
         self.rid[slot] = rid
+        self.offset[slot] = offset
         self.valid[slot] = True
         self.inserts += 1
         self._touch(slot)
@@ -513,15 +531,15 @@ class ShardedFeatureCache:
 
     def probe(
         self, shard: int, t: int, sig: np.ndarray, rid: int,
-        threshold: float | None = None,
+        threshold: float | None = None, offset: int = 0,
     ) -> int | None:
-        return self.rings[shard].probe(t, sig, rid, threshold)
+        return self.rings[shard].probe(t, sig, rid, threshold, offset)
 
     def probe_distance(
         self, shard: int, t: int, sig: np.ndarray, rid: int,
-        threshold: float | None = None,
+        threshold: float | None = None, offset: int = 0,
     ) -> tuple[int, float] | None:
-        return self.rings[shard].probe_distance(t, sig, rid, threshold)
+        return self.rings[shard].probe_distance(t, sig, rid, threshold, offset)
 
     def note_hit(self, shard: int, slot: int) -> None:
         self.rings[shard].note_hit(slot)
@@ -531,9 +549,9 @@ class ShardedFeatureCache:
 
     def reserve(
         self, shard: int, t: int, sig: np.ndarray, rid: int,
-        exclude: set[int] | tuple = (),
+        exclude: set[int] | tuple = (), offset: int = 0,
     ) -> int | None:
-        return self.rings[shard].reserve(t, sig, rid, exclude=exclude)
+        return self.rings[shard].reserve(t, sig, rid, exclude=exclude, offset=offset)
 
     def plan_warmth(self, req, shard: int | None = None) -> float:
         """Warmth of one shard's ring, or the best shard's when unpinned."""

@@ -233,10 +233,15 @@ class LoadStats:
 #: the tier rotation `--quality mix` cycles through (the per-request knob)
 QUALITY_TIERS = ("draft", "balanced", "high", "exact")
 
+#: the task rotation `--task mix` cycles through (the v2 task union)
+TASKS = ("txt2img", "img2img", "inpaint", "variations")
+
 
 def make_payloads(
     n: int, t_lo: int, t_hi: int, plan_mode: str, seed: int,
     quality: str | None = None,
+    task: str = "txt2img",
+    v1: bool = False,
 ) -> list[dict]:
     """Synthetic payload stream: pooled prompts, mixed step counts.
 
@@ -245,7 +250,16 @@ def make_payloads(
     quality knob: a fixed tier/number for every payload, or ``"mix"`` to
     rotate through the named tiers (the mixed-quality-stream workload);
     None omits the field (legacy plan_mode behaviour).
+
+    The client speaks v2 natively: every payload carries ``task`` —
+    a fixed task, or ``"mix"`` to rotate through the union — with the
+    task's conditioning fields synthesized deterministically (img2img:
+    seeded init + strength; inpaint: seeded init + half mask; variations:
+    K=3).  ``v1=True`` keeps the flat pre-task payload for the compat-shim
+    path (only valid with ``task="txt2img"``).
     """
+    if v1 and task != "txt2img":
+        raise ValueError(f"v1 flat payloads cannot express task {task!r}")
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
@@ -260,6 +274,17 @@ def make_payloads(
             p["quality"] = QUALITY_TIERS[i % len(QUALITY_TIERS)]
         elif quality is not None:
             p["quality"] = quality
+        t = TASKS[i % len(TASKS)] if task == "mix" else task
+        if not v1:
+            p["task"] = t
+            if t in ("img2img", "inpaint"):
+                p["init"] = {"seed": int(rng.integers(1 << 30))}
+            if t == "img2img":
+                p["strength"] = float(rng.choice((0.4, 0.75)))
+            elif t == "inpaint":
+                p["mask"] = {"kind": "half"}
+            elif t == "variations":
+                p["variants"] = 3
         out.append(p)
     return out
 
@@ -331,6 +356,8 @@ async def run_load(
     t_hi: int = 6,
     plan_mode: str = "mixed",
     quality: str | None = None,
+    task: str = "txt2img",
+    v1: bool = False,
     cancel: int = 0,
     cancel_after_step: int = 1,
     seed: int = 0,
@@ -347,7 +374,10 @@ async def run_load(
     its direct-engine phase served).
     """
     if payloads is None:
-        payloads = make_payloads(requests, t_lo, t_hi, plan_mode, seed, quality=quality)
+        payloads = make_payloads(
+            requests, t_lo, t_hi, plan_mode, seed,
+            quality=quality, task=task, v1=v1,
+        )
     else:
         payloads = [dict(p) for p in payloads[:requests]]
     cancel_idx = set(range(min(cancel, requests)))
@@ -431,6 +461,8 @@ async def _amain(args) -> int:
         t_hi=args.t_hi,
         plan_mode=args.plan_mode,
         quality=args.quality,
+        task=args.task,
+        v1=args.v1,
         cancel=args.cancel,
         seed=args.seed,
     )
@@ -491,6 +523,14 @@ def main() -> None:
         help="per-request quality knob in every payload: a named tier "
         "(draft|balanced|high|exact), a number in [0,1], or 'mix' to "
         "rotate through the tiers (mixed-quality stream)",
+    )
+    ap.add_argument(
+        "--task", choices=[*TASKS, "mix"], default="txt2img",
+        help="v2 task of every payload, or 'mix' to rotate through the union",
+    )
+    ap.add_argument(
+        "--v1", action="store_true",
+        help="send flat pre-task v1 payloads (compat-shim path; txt2img only)",
     )
     ap.add_argument(
         "--cancel", type=int, default=0,

@@ -71,6 +71,24 @@ class _Ticket:
     last_step: int = -1  # last step index already announced
 
 
+@dataclasses.dataclass
+class _Group:
+    """Host bookkeeping for one variation fan-out (K member requests,
+    one event stream keyed by the group id)."""
+
+    gid: int
+    on_event: Callable[[dict], None] | None
+    members: list[int]  # member rids in variant order
+    queued: int = 0
+    terminal: int = 0
+    cancelled: int = 0
+    errors: list[str] = dataclasses.field(default_factory=list)
+    digests: list[str | None] = dataclasses.field(default_factory=list)
+    latency_s: float = 0.0
+    queue_wait_s: float = 0.0
+    steps: int = 0
+
+
 class EngineDriver:
     """Single-threaded event loop around a ``DiffusionEngine`` (or the
     mesh-sharded subclass — the engine API is identical).
@@ -90,6 +108,7 @@ class EngineDriver:
         self._inbox: queue.SimpleQueue = queue.SimpleQueue()
         self._lock = threading.Lock()
         self._tickets: dict[int, _Ticket] = {}  # open rids (queued or in-lane)
+        self._groups: dict[int, _Group] = {}  # open variation fan-outs by gid
         self._stopping = False
         self._thread: threading.Thread | None = None
         self._final_summary: dict | None = None
@@ -153,11 +172,142 @@ class EngineDriver:
             self._inbox.put(("submit", req.rid))
         return req.rid
 
-    def cancel(self, rid: int) -> bool:
-        """Ask the driver to abort a request; returns whether the rid is
-        currently open (the ``cancelled`` event is delivered async, on the
-        request's own stream)."""
+    def submit_group(
+        self,
+        reqs: list[GenRequest],
+        gid: int,
+        on_event: Callable[[dict], None] | None = None,
+    ) -> int:
+        """Hand a variation fan-out to the driver as ONE logical request.
+
+        The K member requests (same prompt context, distinct seeds) count
+        individually against ``max_inflight`` — the whole group is accepted
+        or rejected atomically — and their lanes are co-resident in the
+        engine, which is what lets them share FULL-step cache captures by
+        construction.  Events arrive on one stream keyed by ``gid``: one
+        ``queued`` (with ``variants``), per-variant ``step`` events, one
+        ``variant_done`` per member carrying its latent digest, then a
+        single terminal ``done`` with all ``variant_digests``, a combined
+        digest, and max member latency.  ``cancel(gid)`` aborts every
+        still-open member.
+        """
+        if not reqs:
+            raise ValueError("a variation group needs at least one member")
         with self._lock:
+            if self._stopping:
+                self.n_rejected += len(reqs)
+                raise SubmitRejected("draining: not accepting new requests")
+            if len(self._tickets) + len(reqs) > self.max_inflight:
+                self.n_rejected += len(reqs)
+                raise SubmitRejected(
+                    f"at capacity: group of {len(reqs)} exceeds "
+                    f"{self.max_inflight} open-request bound"
+                )
+            for req in reqs:
+                if req.rid in self._tickets:
+                    raise SubmitRejected(f"rid {req.rid} is already open")
+            if gid in self._groups or gid in self._tickets:
+                raise SubmitRejected(f"group id {gid} is already open")
+            g = _Group(
+                gid=gid, on_event=on_event,
+                members=[r.rid for r in reqs],
+                digests=[None] * len(reqs),
+            )
+            self._groups[gid] = g
+            now = self._clock()
+            for i, req in enumerate(reqs):
+                req.arrival_s = now
+                self._tickets[req.rid] = _Ticket(req, self._group_member_events(g, i))
+                self.n_accepted += 1
+                self._inbox.put(("submit", req.rid))
+        return gid
+
+    def _group_member_events(self, g: _Group, idx: int) -> Callable[[dict], None]:
+        """Member-event translator: re-keys one member's stream onto the
+        group id.  Runs on the driver thread only (like every callback), so
+        the group counters need no extra locking."""
+
+        def on_event(ev: dict) -> None:
+            kind = ev.get("event")
+            if kind == "queued":
+                g.queued += 1
+                if g.queued == len(g.members) and g.on_event is not None:
+                    g.on_event({
+                        "event": "queued", "rid": g.gid,
+                        "variants": len(g.members),
+                        "quality": ev.get("quality"),
+                        "pending": ev.get("pending"), "active": ev.get("active"),
+                    })
+            elif kind == "step":
+                if g.on_event is not None:
+                    g.on_event({
+                        "event": "step", "rid": g.gid, "variant": idx,
+                        "step": ev["step"], "n_steps": ev["n_steps"],
+                    })
+            elif kind == "done":
+                g.digests[idx] = ev["latent_digest"]
+                g.latency_s = max(g.latency_s, ev["latency_s"])
+                g.queue_wait_s = max(g.queue_wait_s, ev["queue_wait_s"])
+                g.steps = max(g.steps, ev["steps"])
+                g.terminal += 1
+                if g.on_event is not None:
+                    g.on_event({
+                        "event": "variant_done", "rid": g.gid, "variant": idx,
+                        "latent_digest": ev["latent_digest"],
+                    })
+                self._maybe_finish_group(g)
+            elif kind == "cancelled":
+                g.cancelled += 1
+                g.terminal += 1
+                self._maybe_finish_group(g)
+            elif kind == "error":
+                g.errors.append(str(ev.get("error", "engine error")))
+                g.terminal += 1
+                self._maybe_finish_group(g)
+
+        return on_event
+
+    def _maybe_finish_group(self, g: _Group) -> None:
+        if g.terminal < len(g.members):
+            return
+        with self._lock:
+            self._groups.pop(g.gid, None)
+        if g.on_event is None:
+            return
+        if g.errors:
+            g.on_event({"event": "error", "rid": g.gid, "error": g.errors[0]})
+        elif g.cancelled:
+            g.on_event({
+                "event": "cancelled", "rid": g.gid,
+                "variants_done": sum(d is not None for d in g.digests),
+            })
+        else:
+            combined = hashlib.sha256(
+                "".join(d for d in g.digests if d is not None).encode()
+            ).hexdigest()[:16]
+            g.on_event({
+                "event": "done",
+                "rid": g.gid,
+                "variants": len(g.members),
+                "variant_digests": list(g.digests),
+                "latent_digest": combined,
+                "latency_s": round(g.latency_s, 6),
+                "queue_wait_s": round(g.queue_wait_s, 6),
+                "steps": g.steps,
+            })
+
+    def cancel(self, rid: int) -> bool:
+        """Ask the driver to abort a request (or a whole variation group by
+        its gid); returns whether the id is currently open (the
+        ``cancelled`` event is delivered async, on the request's own
+        stream)."""
+        with self._lock:
+            g = self._groups.get(rid)
+            if g is not None:
+                members = [m for m in g.members if m in self._tickets]
+                for m in members:
+                    self._inbox.put(("cancel", m))
+                return bool(members)
             known = rid in self._tickets
             if known:
                 self._inbox.put(("cancel", rid))  # same lock as submit: FIFO holds

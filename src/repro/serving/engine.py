@@ -29,6 +29,7 @@ import numpy as np
 from repro.common import sharding as SH
 from repro.common.types import DiffusionConfig, PASPlan, UNetConfig
 from repro.core import sampler as SM
+from repro.models import diffusion as D
 from repro.models import unet as U
 from repro.models import vae as V
 from repro.serving import lanes as LN
@@ -47,7 +48,15 @@ Params = dict[str, Any]
 
 @dataclasses.dataclass(eq=False)  # identity semantics: queues remove by object
 class GenRequest:
-    """One text-conditioned generation request."""
+    """One conditioned generation request (txt2img, img2img, or inpaint).
+
+    ``timesteps`` is always the *executed* step count.  An img2img request
+    additionally carries ``base_timesteps`` (the untruncated schedule the
+    stride comes from — ``timesteps < base_timesteps`` is a strength
+    truncation) and ``init_latent`` (the known image, noised to the entry
+    timestep at submission).  An inpaint request carries ``mask`` (1 =
+    generate, 0 = keep ``init_latent``; blended every micro-step).
+    """
 
     rid: int
     ctx: np.ndarray  # [ctx_len, ctx_dim] prompt embedding
@@ -63,13 +72,29 @@ class GenRequest:
     #: the cache-threshold decision threaded down to the jitted micro-step.
     #: None = legacy request: the engine-global threshold applies.
     policy: ResolvedPolicy | None = None
+    #: [L, C] known latent for img2img/inpaint; None = txt2img (pure noise)
+    init_latent: np.ndarray | None = None
+    #: [L] or [L, 1] inpaint mask in [0, 1] (1 = generate); None = no mask
+    mask: np.ndarray | None = None
+    #: untruncated schedule length; None = ``timesteps`` (no truncation)
+    base_timesteps: int | None = None
 
     _lane_plan: LN.LanePlan | None = dataclasses.field(default=None, repr=False)
     _sig: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    #: [L, C] lane entry latent: the seeded+noised init for truncated
+    #: img2img, else ``noise`` (set at submission)
+    _entry: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
     def branch_vector(self) -> np.ndarray:
         assert self._lane_plan is not None, "request not yet submitted"
         return self._lane_plan.branches[: self.timesteps]
+
+    @property
+    def sched_offset(self) -> int:
+        """Schedule-truncation cache key: base minus executed steps (0 for
+        the stock schedule) — warm hits never cross different offsets."""
+        base = self.timesteps if self.base_timesteps is None else self.base_timesteps
+        return base - self.timesteps
 
     @property
     def quality_tier(self) -> str:
@@ -223,13 +248,66 @@ class DiffusionEngine:
             if req.policy is None
             else req.policy.threshold_spec(self.config.cache_threshold)
         )
+        base = req.timesteps if req.base_timesteps is None else int(req.base_timesteps)
         req._lane_plan = LN.make_plan_arrays(
             self.dcfg, req.timesteps, req.plan, self.config.max_steps,
-            threshold=threshold,
+            threshold=threshold, base_timesteps=base,
         )
+        L, c = req.noise.shape
+        if req.mask is not None:
+            m = np.asarray(req.mask, np.float32)
+            if m.ndim == 1:
+                m = m[:, None]
+            if m.shape != (L, 1):
+                raise ValueError(
+                    f"mask shape {np.asarray(req.mask).shape} does not match "
+                    f"latent [{L}] (want [{L}] or [{L}, 1])"
+                )
+            if float(m.min()) < 0.0 or float(m.max()) > 1.0:
+                raise ValueError("mask values must lie in [0, 1]")
+            req.mask = m
+        if req.init_latent is not None and np.asarray(req.init_latent).shape != (L, c):
+            raise ValueError(
+                f"init latent shape {np.asarray(req.init_latent).shape} does not "
+                f"match noise shape {(L, c)}"
+            )
+        if req.init_latent is not None and req.timesteps < base:
+            # strength-truncated img2img: the lane enters mid-schedule, so
+            # seed it with the known image noised to the entry timestep —
+            # the same q_sample the straight-line reference uses
+            sched = D.make_schedule(self.dcfg)
+            t0 = jnp.full((1,), int(req._lane_plan.ts[0]), jnp.int32)
+            entry = D.q_sample(
+                sched,
+                jnp.asarray(req.init_latent, jnp.float32)[None],
+                t0,
+                jnp.asarray(req.noise, jnp.float32)[None],
+            )[0]
+            req._entry = np.asarray(entry)
+        else:
+            req._entry = req.noise
         req._sig = prompt_signature(req.ctx)
         self.metrics.record_submission(req.quality_tier)
         self.scheduler.add(req)
+
+    def _admit_extras(self, req: GenRequest) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Concrete (mask, x_init, noise0) lane tensors for one request —
+        always-arrays so the jitted admit compiles once for every task
+        (txt2img gets the all-ones mask + zeros, structurally the identity)."""
+        L, c = req.noise.shape
+        if req.mask is None:
+            mask = jnp.ones((L, 1), jnp.float32)
+            x_init = jnp.zeros((L, c), jnp.float32)
+            noise0 = jnp.zeros((L, c), jnp.float32)
+        else:
+            mask = jnp.asarray(req.mask, jnp.float32)
+            x_init = (
+                jnp.zeros((L, c), jnp.float32)
+                if req.init_latent is None
+                else jnp.asarray(req.init_latent, jnp.float32)
+            )
+            noise0 = jnp.asarray(req.noise, jnp.float32)
+        return mask, x_init, noise0
 
     # -- introspection ------------------------------------------------------
 
@@ -296,16 +374,18 @@ class DiffusionEngine:
             if req is None:
                 return
             lp = req._lane_plan
+            mask, x_init, noise0 = self._admit_extras(req)
             self._state = self._admit(
                 self._state,
                 jnp.int32(lane),
-                jnp.asarray(req.noise),
+                jnp.asarray(req._entry),
                 jnp.asarray(req.ctx),
                 jnp.asarray(lp.branches),
                 jnp.asarray(lp.ts),
                 jnp.asarray(lp.t_prev),
                 jnp.int32(lp.n_steps),
                 jnp.asarray(lp.thr),
+                mask, x_init, noise0,
             )
             self._lane_req[lane] = req
             self._lane_step[lane] = 0
@@ -352,7 +432,8 @@ class DiffusionEngine:
             step = self._lane_step[lane]
             t = int(req._lane_plan.ts[step])
             hit = self.cache.probe_distance(
-                t, req._sig, req.rid, float(req._lane_plan.thr[step])
+                t, req._sig, req.rid, float(req._lane_plan.thr[step]),
+                req.sched_offset,
             )
             if hit is not None:
                 hits[lane] = hit
@@ -437,7 +518,9 @@ class DiffusionEngine:
                         # only this request could ever consume the capture,
                         # and it opted out — don't evict useful slots for it
                         continue
-                    slot = self.cache.reserve(t, req._sig, req.rid, exclude=taken)
+                    slot = self.cache.reserve(
+                        t, req._sig, req.rid, exclude=taken, offset=req.sched_offset
+                    )
                     if slot is None:  # ring smaller than the FULL batch
                         continue
                     taken.add(slot)
@@ -663,16 +746,18 @@ class ShardedDiffusionEngine(DiffusionEngine):
             if req is None:
                 return
             lp = req._lane_plan
+            mask, x_init, noise0 = self._admit_extras(req)
             self._state = self._admit(
                 self._state,
                 jnp.int32(lane),
-                jnp.asarray(req.noise),
+                jnp.asarray(req._entry),
                 jnp.asarray(req.ctx),
                 jnp.asarray(lp.branches),
                 jnp.asarray(lp.ts),
                 jnp.asarray(lp.t_prev),
                 jnp.int32(lp.n_steps),
                 jnp.asarray(lp.thr),
+                mask, x_init, noise0,
             )
             self._lane_req[lane] = req
             self._lane_step[lane] = 0
@@ -696,7 +781,7 @@ class ShardedDiffusionEngine(DiffusionEngine):
             t = int(req._lane_plan.ts[step])
             hit = self.cache.probe_distance(
                 self._shard_of(lane), t, req._sig, req.rid,
-                float(req._lane_plan.thr[step]),
+                float(req._lane_plan.thr[step]), req.sched_offset,
             )
             if hit is not None:
                 hits[lane] = hit
@@ -792,7 +877,10 @@ class ShardedDiffusionEngine(DiffusionEngine):
                         self.cache.note_miss(s)  # probed FULL executed as FULL
                     if self.config.cache_mode == "intra" and not req.allow_cache:
                         continue
-                    slot = self.cache.reserve(s, t, req._sig, req.rid, exclude=taken)
+                    slot = self.cache.reserve(
+                        s, t, req._sig, req.rid, exclude=taken,
+                        offset=req.sched_offset,
+                    )
                     if slot is None:  # shard ring smaller than the FULL batch
                         continue
                     taken.add(slot)

@@ -11,9 +11,15 @@ backpressure surfaces as HTTP 429.
 Endpoints (HTTP/1.1, ``Connection: close``):
 
 ``POST /generate``
-    JSON body ``{"prompt": str, "timesteps": int, "quality": str|float,
-    "plan": {...}, "pas": bool, "seed": int, "allow_cache": bool,
-    "stream": bool}`` (all optional but ``timesteps`` recommended).
+    v2 JSON body: ``{"task": "txt2img"|"img2img"|"inpaint"|"variations",
+    "prompt": str, "timesteps": int, "quality": str|float, "plan": {...},
+    "pas": bool, "seed": int, "allow_cache": bool, "stream": bool}`` plus
+    the task's own fields — ``img2img``: ``init`` + ``strength``;
+    ``inpaint``: ``init`` + ``mask``; ``variations``: ``variants`` (see
+    ``repro.serving.schema`` / ``docs/api.md``).  A payload *without* a
+    ``task`` key is a v1 flat payload, accepted through the compat shim
+    with a ``Deprecation`` response header.  Malformed payloads get
+    structured 400s: ``{"error": {"code", "field", "detail"}}``.
     ``quality`` is the per-request quality knob — a named tier
     (``draft``/``balanced``/``high``/``exact``) or a number in [0, 1] —
     resolved by :mod:`repro.serving.policy` into a PAS plan plus the
@@ -66,10 +72,16 @@ from repro.serving.driver import EngineDriver, SubmitRejected, TERMINAL_EVENTS
 # plan + threshold resolution lives in exactly one module now; the old
 # ``frontend.default_pas_plan`` import path keeps working via this re-export
 from repro.serving.policy import QualityPolicy, default_pas_plan  # noqa: F401
+from repro.serving.schema import RequestSpec, SchemaError, parse_request
 
 _MAX_BODY = 1 << 20  # 1 MiB: generate payloads are tiny JSON
 
-_PLAN_FIELDS = ("t_sketch", "t_complete", "t_sparse", "l_sketch", "l_refine")
+# the plan-field tuple moved to the schema module with the rest of request
+# validation; re-exported for pre-schema import paths
+from repro.serving.schema import PLAN_FIELDS as _PLAN_FIELDS  # noqa: E402
+
+#: response header every v1-shim response carries (RFC 9745 shape)
+DEPRECATION_HEADER = (b"Deprecation", b'version="v1"')
 
 
 class RequestFactory:
@@ -106,15 +118,12 @@ class RequestFactory:
         self._rid = itertools.count()
         self._lock = threading.Lock()
 
-    def _parse_plan(self, payload: dict[str, Any], timesteps: int) -> PASPlan | None:
-        spec = payload.get("plan")
+    def _plan_from_spec(self, spec: dict | None, timesteps: int) -> PASPlan | None:
         if spec is None:
             return None
-        if not isinstance(spec, dict):
-            raise ValueError("plan must be a JSON object of PASPlan fields")
         unknown = set(spec) - set(_PLAN_FIELDS)
         if unknown:
-            raise ValueError(f"unknown plan fields: {sorted(unknown)}")
+            raise SchemaError("unknown", "plan", f"unknown plan fields: {sorted(unknown)}")
         try:
             plan = PASPlan(
                 t_sketch=int(spec["t_sketch"]),
@@ -124,43 +133,142 @@ class RequestFactory:
                 l_refine=int(spec.get("l_refine", self.l_refine)),
             )
         except KeyError as e:
-            raise ValueError(f"plan is missing field {e.args[0]!r}") from None
-        plan.validate(timesteps, self.n_up)
+            raise SchemaError(
+                "missing", "plan", f"plan is missing field {e.args[0]!r}"
+            ) from None
+        try:
+            plan.validate(timesteps, self.n_up)
+        except ValueError as e:
+            raise SchemaError("invalid", "plan", str(e)) from None
         return plan
 
-    def make(self, payload: dict[str, Any]):
+    def _parse_plan(self, payload: dict[str, Any], timesteps: int) -> PASPlan | None:
+        """Pre-schema entry point, kept for direct callers."""
+        spec = payload.get("plan")
+        if spec is not None and not isinstance(spec, dict):
+            raise SchemaError("invalid", "plan", "must be a JSON object of PASPlan fields")
+        return self._plan_from_spec(spec, timesteps)
+
+    def _materialize_mask(self, mask_spec: dict, L: int) -> np.ndarray:
+        """Mask spec -> concrete [L] float32 mask (1 = generate)."""
+        kind = mask_spec["kind"]
+        if kind == "ones":
+            return np.ones((L,), np.float32)
+        if kind == "half":
+            m = np.ones((L,), np.float32)
+            m[: int(round(float(mask_spec.get("frac", 0.5)) * L))] = 0.0
+            return m
+        values = np.asarray(mask_spec["values"], np.float32)
+        if values.shape != (L,):
+            raise SchemaError(
+                "invalid", "mask",
+                f"explicit mask needs {L} values, got {values.shape[0]}",
+            )
+        return values
+
+    def _init_latent(self, init_seed: int, L: int) -> np.ndarray:
+        """Deterministic synthetic init image for a ``{"seed": ...}`` handle.
+
+        Drawn from its own rng stream (keyed off the handle seed, not the
+        request seed) so txt2img request synthesis — and therefore every
+        pre-v2 latent digest — is untouched by the new draw.
+        """
+        rng = np.random.default_rng((2, init_seed))
+        return rng.normal(size=(L, self.ucfg.in_channels)).astype(np.float32)
+
+    def build(self, payload: dict[str, Any]):
+        """Validate one payload and materialize its engine request(s).
+
+        Returns ``(requests, gid, spec)``: a single-element list and
+        ``gid=None`` for txt2img/img2img/inpaint, or the K-member variant
+        list plus the group id the driver should stream them under.
+        Raises :class:`SchemaError` (a ``ValueError``) on any invalid
+        payload.
+        """
         from repro.serving.engine import GenRequest
 
-        if not isinstance(payload, dict):
-            raise ValueError("payload must be a JSON object")
-        timesteps = int(payload.get("timesteps", self.max_steps))
-        if not 1 <= timesteps <= self.max_steps:
-            raise ValueError(
-                f"timesteps must be in [1, {self.max_steps}], got {timesteps}"
-            )
-        prompt = str(payload.get("prompt", ""))
-        seed = int(payload.get("seed", 0))
-        mix = int.from_bytes(hashlib.sha256(prompt.encode()).digest()[:8], "little")
-        rng = np.random.default_rng((seed, mix))
+        spec = parse_request(payload, max_steps=self.max_steps)
         L = self.ucfg.latent_size**2
-        quality = payload.get("quality", self.default_quality)
+        # the policy resolves over the request's ACTUAL schedule: for a
+        # strength-truncated img2img that is the tail of the base schedule,
+        # so per-bucket thresholds land in the buckets its steps really
+        # visit (and plan shapes size to the executed length)
+        if spec.timesteps < spec.base_timesteps:
+            stride = self.dcfg.timesteps_train // spec.base_timesteps
+            ts_vec = (np.arange(spec.base_timesteps, dtype=np.int64) * stride)[::-1]
+            resolve_steps: int | np.ndarray = ts_vec[
+                spec.base_timesteps - spec.timesteps:
+            ]
+        else:
+            resolve_steps = spec.timesteps
+        quality = spec.quality if spec.quality is not None else self.default_quality
         pol = self.policy.resolve(
-            timesteps,
+            resolve_steps,
             quality=quality,
-            pas=bool(payload.get("pas")),
-            plan=self._parse_plan(payload, timesteps),
+            pas=spec.pas,
+            plan=self._plan_from_spec(spec.plan_spec, spec.timesteps),
+        )
+        mix = int.from_bytes(hashlib.sha256(spec.prompt.encode()).digest()[:8], "little")
+        rng = np.random.default_rng((spec.seed, mix))
+        ctx = rng.normal(size=(self.ucfg.ctx_len, self.ucfg.ctx_dim)).astype(np.float32) * 0.2
+        noise = rng.normal(size=(L, self.ucfg.in_channels)).astype(np.float32)
+
+        if spec.task == "variations":
+            # variant 0 reuses the txt2img noise; later variants draw
+            # sequentially from the same stream, so the fan-out is a
+            # deterministic function of (prompt, seed, K)
+            noises = [noise] + [
+                rng.normal(size=(L, self.ucfg.in_channels)).astype(np.float32)
+                for _ in range(spec.variants - 1)
+            ]
+            with self._lock:
+                rids = [next(self._rid) for _ in range(spec.variants)]
+                gid = next(self._rid)
+            reqs = [
+                GenRequest(
+                    rid=rid,
+                    ctx=ctx,
+                    noise=nz,
+                    timesteps=spec.timesteps,
+                    plan=pol.plan,
+                    allow_cache=spec.allow_cache,
+                    policy=pol,
+                )
+                for rid, nz in zip(rids, noises)
+            ]
+            return reqs, gid, spec
+
+        init_latent = (
+            self._init_latent(spec.init_seed, L) if spec.init_seed is not None else None
+        )
+        mask = (
+            self._materialize_mask(spec.mask_spec, L)
+            if spec.mask_spec is not None
+            else None
         )
         with self._lock:
             rid = next(self._rid)
-        return GenRequest(
+        req = GenRequest(
             rid=rid,
-            ctx=rng.normal(size=(self.ucfg.ctx_len, self.ucfg.ctx_dim)).astype(np.float32) * 0.2,
-            noise=rng.normal(size=(L, self.ucfg.in_channels)).astype(np.float32),
-            timesteps=timesteps,
+            ctx=ctx,
+            noise=noise,
+            timesteps=spec.timesteps,
             plan=pol.plan,
-            allow_cache=bool(payload.get("allow_cache", True)),
+            allow_cache=spec.allow_cache,
             policy=pol,
+            init_latent=init_latent,
+            mask=mask,
+            base_timesteps=spec.base_timesteps,
         )
+        return [req], None, spec
+
+    def make(self, payload: dict[str, Any]):
+        """Single-request entry point (the pre-v2 API, still exact for
+        flat payloads: same rng draws, same rid allocation)."""
+        reqs, gid, _spec = self.build(payload)
+        if gid is not None:
+            raise ValueError("variation groups must be built via build()")
+        return reqs[0]
 
 
 # ---------------------------------------------------------------------------
@@ -194,23 +302,35 @@ def _status_line(status: int) -> bytes:
     return f"HTTP/1.1 {status} {phrase}\r\n".encode()
 
 
-async def send_json(writer: asyncio.StreamWriter, status: int, payload: dict) -> None:
+def _extra_header_bytes(extra_headers: tuple[tuple[bytes, bytes], ...]) -> bytes:
+    return b"".join(k + b": " + v + b"\r\n" for k, v in extra_headers)
+
+
+async def send_json(
+    writer: asyncio.StreamWriter, status: int, payload: dict,
+    extra_headers: tuple[tuple[bytes, bytes], ...] = (),
+) -> None:
     body = (json.dumps(payload) + "\n").encode()
     writer.write(
         _status_line(status)
         + b"Content-Type: application/json\r\n"
         + f"Content-Length: {len(body)}\r\n".encode()
+        + _extra_header_bytes(extra_headers)
         + b"Connection: close\r\n\r\n"
         + body
     )
     await writer.drain()
 
 
-async def start_chunked(writer: asyncio.StreamWriter, status: int = 200) -> None:
+async def start_chunked(
+    writer: asyncio.StreamWriter, status: int = 200,
+    extra_headers: tuple[tuple[bytes, bytes], ...] = (),
+) -> None:
     writer.write(
         _status_line(status)
         + b"Content-Type: application/x-ndjson\r\n"
         + b"Transfer-Encoding: chunked\r\n"
+        + _extra_header_bytes(extra_headers)
         + b"Connection: close\r\n\r\n"
     )
     await writer.drain()
@@ -376,10 +496,21 @@ class HTTPFrontend:
         await send_json(writer, 200, {"accepted": accepted, "rid": rid})
 
     async def _handle_generate(self, writer: asyncio.StreamWriter, payload: dict) -> None:
+        spec: RequestSpec | None = None
         try:
-            req = self.factory.make(payload)
+            reqs, gid, spec = self.factory.build(payload)
+        except SchemaError as e:
+            hdrs = (DEPRECATION_HEADER,) if isinstance(payload, dict) and "task" not in payload else ()
+            return await send_json(writer, 400, {"error": e.as_dict()}, hdrs)
         except (ValueError, TypeError) as e:
-            return await send_json(writer, 400, {"error": str(e)})
+            # non-schema construction failure (e.g. policy resolution):
+            # same structured shape, generic code
+            return await send_json(
+                writer, 400,
+                {"error": {"code": "invalid", "field": "body", "detail": str(e)}},
+            )
+        hdrs = (DEPRECATION_HEADER,) if spec.v1 else ()
+        stream_id = gid if gid is not None else reqs[0].rid
 
         loop = asyncio.get_running_loop()
         events: asyncio.Queue = asyncio.Queue()
@@ -388,28 +519,31 @@ class HTTPFrontend:
             loop.call_soon_threadsafe(events.put_nowait, ev)
 
         try:
-            self.driver.submit(req, on_event)
+            if gid is not None:
+                self.driver.submit_group(reqs, gid, on_event)
+            else:
+                self.driver.submit(reqs[0], on_event)
         except SubmitRejected as e:
             status = 503 if self.driver.draining else 429
-            return await send_json(writer, status, {"error": str(e)})
+            return await send_json(writer, status, {"error": str(e)}, hdrs)
 
         # both branches count as open streams so a drain never stops the
         # server loop before the terminal response reached the socket
         self._n_streams += 1
         self._streams_idle.clear()
-        if not payload.get("stream", True):
+        if not spec.stream:
             try:
                 while True:
                     ev = await events.get()
                     if ev["event"] in TERMINAL_EVENTS:
-                        return await send_json(writer, 200, ev)
+                        return await send_json(writer, 200, ev, hdrs)
             finally:
                 self._n_streams -= 1
                 if self._n_streams == 0:
                     self._streams_idle.set()
 
         try:
-            await start_chunked(writer)
+            await start_chunked(writer, extra_headers=hdrs)
             while True:
                 ev = await events.get()
                 try:
@@ -417,14 +551,15 @@ class HTTPFrontend:
                     await writer.drain()
                 except (ConnectionError, OSError):
                     # client went away mid-denoise: stop burning lane-steps
-                    self.driver.cancel(req.rid)
+                    # (a group id cancels every still-open variant)
+                    self.driver.cancel(stream_id)
                     return
                 if ev["event"] in TERMINAL_EVENTS:
                     break
             writer.write(b"0\r\n\r\n")
             await writer.drain()
         except (ConnectionError, OSError):
-            self.driver.cancel(req.rid)
+            self.driver.cancel(stream_id)
         finally:
             self._n_streams -= 1
             if self._n_streams == 0:

@@ -55,6 +55,12 @@ class LaneState(NamedTuple):
     step: jax.Array  # [N] current step index into the plan
     n_steps: jax.Array  # [N] plan length; 0 marks an empty lane
     thr: jax.Array  # [N, max_steps] per-step cache threshold (quality policy)
+    #: [N, L, 1] inpaint mask (1 = generate, 0 = keep the init latent); a
+    #: full-ones mask makes the per-step blend structurally the identity,
+    #: so txt2img lanes stay bit-exact with the pre-mask micro-step
+    mask: jax.Array
+    x_init: jax.Array  # [N, L, C] known latent under the mask (zeros if unused)
+    noise0: jax.Array  # [N, L, C] fixed noise re-noising the known region
 
     @property
     def n_lanes(self) -> int:
@@ -82,17 +88,29 @@ def make_plan_arrays(
     plan: PASPlan | None,
     max_steps: int,
     threshold: float | Callable[[np.ndarray], np.ndarray] = 0.0,
+    base_timesteps: int | None = None,
 ) -> LanePlan:
     """Precompute one request's branch/timestep vectors, padded to max_steps.
 
     ``threshold`` is the request's cache-threshold resolution: a scalar, or
     a callable mapping the step's train timesteps to per-step thresholds
     (how the quality policy expresses calibrated per-bucket thresholds).
+
+    ``base_timesteps`` is the img2img truncation: the schedule stride (and
+    the train timesteps each step sees) comes from the *base* schedule and
+    only its last ``timesteps`` entries execute — ``None`` (or equal to
+    ``timesteps``) is the stock untruncated schedule.
     """
     if timesteps > max_steps:
         raise ValueError(f"request wants {timesteps} steps, engine max is {max_steps}")
-    stride = dcfg.timesteps_train // timesteps
-    ts = (np.arange(timesteps, dtype=np.int64) * stride)[::-1].astype(np.int32)
+    base = timesteps if base_timesteps is None else int(base_timesteps)
+    if not 1 <= timesteps <= base:
+        raise ValueError(
+            f"truncated schedule wants {timesteps} of base {base} steps"
+        )
+    stride = dcfg.timesteps_train // base
+    ts = (np.arange(base, dtype=np.int64) * stride)[::-1].astype(np.int32)
+    ts = ts[base - timesteps:]
     t_prev = np.concatenate([ts[1:], np.array([-1], np.int32)])
     if plan is None:
         branches = np.full((timesteps,), SM.FULL, np.int32)
@@ -136,19 +154,25 @@ def init_lanes(
         step=z((n_lanes,), jnp.int32),
         n_steps=z((n_lanes,), jnp.int32),
         thr=z((n_lanes, max_steps), jnp.float32),
+        mask=jnp.ones((n_lanes, L, 1), dtype),
+        x_init=z((n_lanes, L, c), dtype),
+        noise0=z((n_lanes, L, c), dtype),
     )
 
 
 def admit(
     state: LaneState,
     lane: jax.Array,  # scalar int32 lane index (traced: one compile)
-    noise: jax.Array,  # [L, C] request's initial latent noise
+    noise: jax.Array,  # [L, C] request's entry latent (noise or seeded init)
     ctx: jax.Array,  # [ctx_len, ctx_dim]
     branches: jax.Array,  # [max_steps]
     ts: jax.Array,  # [max_steps]
     t_prev: jax.Array,  # [max_steps]
     n_steps: jax.Array,  # scalar int32
     thr: jax.Array | None = None,  # [max_steps] per-step cache threshold
+    mask: jax.Array | None = None,  # [L, 1] inpaint mask; None = all-ones
+    x_init: jax.Array | None = None,  # [L, C] known latent; None = zeros
+    noise0: jax.Array | None = None,  # [L, C] known-region noise; None = zeros
 ) -> LaneState:
     """Scatter one request into an (empty) lane, resetting its sampler state."""
     n = state.n_lanes
@@ -165,6 +189,9 @@ def admit(
         step=state.step.at[lane].set(0),
         n_steps=state.n_steps.at[lane].set(n_steps),
         thr=state.thr.at[lane].set(0.0 if thr is None else thr),
+        mask=state.mask.at[lane].set(1.0 if mask is None else mask),
+        x_init=state.x_init.at[lane].set(0.0 if x_init is None else x_init),
+        noise0=state.noise0.at[lane].set(0.0 if noise0 is None else noise0),
     )
 
 
@@ -283,6 +310,17 @@ def make_micro_step(
             x_new = D.ddim_step_batched(sched, state.x, eps, t, tp)
             ets_new, n_new = state.ets, state.n_ets
 
+        # inpaint blend: re-noise each lane's known region to its own target
+        # timestep and keep it where the mask is 0.  jnp.where selects the
+        # denoised latent *exactly* where mask >= 1, so txt2img lanes (all-
+        # ones mask) are structurally untouched by this step.
+        ab = jnp.where(tp >= 0, sched.alphas_cumprod[jnp.maximum(tp, 0)], 1.0)
+        ab = ab[:, None, None]
+        known = jnp.sqrt(ab) * state.x_init + jnp.sqrt(1.0 - ab) * state.noise0
+        x_new = jnp.where(
+            state.mask >= 1.0, x_new, state.mask * x_new + (1.0 - state.mask) * known
+        )
+
         m3 = sel[:, None, None]
         sel2 = jnp.concatenate([sel, sel], axis=0)[:, None, None]
         return state._replace(
@@ -364,6 +402,9 @@ class ShardedLaneState(NamedTuple):
     step: jax.Array  # [N]
     n_steps: jax.Array  # [N]
     thr: jax.Array  # [N, max_steps] per-step cache threshold (quality policy)
+    mask: jax.Array  # [N, L, 1] inpaint mask (1 = generate; all-ones = identity)
+    x_init: jax.Array  # [N, L, C] known latent under the mask (zeros if unused)
+    noise0: jax.Array  # [N, L, C] fixed noise re-noising the known region
 
     @property
     def n_lanes(self) -> int:
@@ -407,6 +448,9 @@ def init_sharded_lanes(
         step=z((n_lanes,), jnp.int32),
         n_steps=z((n_lanes,), jnp.int32),
         thr=z((n_lanes, max_steps), jnp.float32),
+        mask=jax.device_put(jnp.ones((n_lanes, L, 1), dtype), sh),
+        x_init=z((n_lanes, L, c)),
+        noise0=z((n_lanes, L, c)),
     )
 
 
@@ -426,6 +470,9 @@ def make_sharded_admit(mesh):
         t_prev: jax.Array,
         n_steps: jax.Array,
         thr: jax.Array | None = None,
+        mask: jax.Array | None = None,  # [L, 1] inpaint mask; None = all-ones
+        x_init: jax.Array | None = None,  # [L, C] known latent; None = zeros
+        noise0: jax.Array | None = None,  # [L, C] known-region noise; None = zeros
     ) -> ShardedLaneState:
         return ShardedLaneState(
             x=state.x.at[lane].set(noise),
@@ -440,6 +487,9 @@ def make_sharded_admit(mesh):
             step=state.step.at[lane].set(0),
             n_steps=state.n_steps.at[lane].set(n_steps),
             thr=state.thr.at[lane].set(0.0 if thr is None else thr),
+            mask=state.mask.at[lane].set(1.0 if mask is None else mask),
+            x_init=state.x_init.at[lane].set(0.0 if x_init is None else x_init),
+            noise0=state.noise0.at[lane].set(0.0 if noise0 is None else noise0),
         )
 
     return jax.jit(admit_sharded, donate_argnums=(0,), out_shardings=sh)
@@ -559,6 +609,15 @@ def make_sharded_micro_step(
         else:
             x_new = D.ddim_step_batched(sched, state.x, eps, t, tp)
             ets_new, n_new = state.ets, state.n_ets
+
+        # inpaint blend — shard-local, same formula as the single-device
+        # micro-step; jnp.where keeps all-ones-mask lanes structurally exact
+        ab = jnp.where(tp >= 0, sched.alphas_cumprod[jnp.maximum(tp, 0)], 1.0)
+        ab = ab[:, None, None]
+        known = jnp.sqrt(ab) * state.x_init + jnp.sqrt(1.0 - ab) * state.noise0
+        x_new = jnp.where(
+            state.mask >= 1.0, x_new, state.mask * x_new + (1.0 - state.mask) * known
+        )
 
         m3 = sel[:, None, None]
         m4 = sel[:, None, None, None]

@@ -235,7 +235,7 @@ class QualityPolicy:
 
     def resolve(
         self,
-        timesteps: int,
+        timesteps: int | np.ndarray,
         *,
         quality: float | str | None = None,
         pas: bool = False,
@@ -243,12 +243,27 @@ class QualityPolicy:
     ) -> ResolvedPolicy:
         """Resolve one request's quality decision.
 
+        ``timesteps`` is either the executed step count or the request's
+        *actual* train-timestep vector (what truncated img2img schedules
+        carry) — plan shapes are sized to the executed length either way,
+        and per-bucket thresholds always resolve against the real train
+        timesteps via :meth:`ResolvedPolicy.threshold_for`, so a
+        strength-truncated schedule gets the buckets its own steps land
+        in, never the stock full-length schedule's.
+
         ``quality=None`` is the legacy path — exactly today's behaviour:
         ``plan`` (explicit) or the stock PAS plan when ``pas`` is set, and
         the engine-global cache threshold.  With a quality knob, the tier
         decides both the plan shape (unless ``plan`` overrides it) and the
         threshold scale; ``exact`` is the bit-exact all-FULL resolution.
         """
+        if not isinstance(timesteps, (int, np.integer)):
+            ts = np.asarray(timesteps)
+            if ts.ndim != 1 or ts.size == 0:
+                raise ValueError(
+                    f"timestep vector must be 1-D and nonempty, got shape {ts.shape}"
+                )
+            timesteps = int(ts.size)
         if quality is None:
             if plan is None and pas:
                 plan = default_pas_plan(timesteps, self.n_up, self.l_sketch, self.l_refine)

@@ -7,6 +7,7 @@ starting its thread, which makes backpressure and cancel ordering
 deterministic (messages queue in the inbox until ``start()``).
 """
 import asyncio
+import json
 import os
 import subprocess
 import sys
@@ -28,6 +29,7 @@ from repro.serving import (
     HTTPFrontend,
     PlanAwareScheduler,
     RequestFactory,
+    SchemaError,
     SubmitRejected,
     default_pas_plan,
 )
@@ -337,6 +339,169 @@ def test_http_exact_quality_digest_matches_default(engine):
         assert base["latent_digest"] == exact["latent_digest"]
         await client.shutdown()
         await serve_task
+
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# v2 schema over HTTP: conditioned tasks, structured 400s, the v1 shim
+# ---------------------------------------------------------------------------
+
+
+async def _raw_post(client, payload):
+    """POST /generate, return (status, headers, body) with headers visible."""
+    from repro.serving.client import _read_body, _read_response_head
+
+    body = json.dumps(payload).encode()
+    reader, writer = await client._connect()
+    try:
+        writer.write(client._head("POST", "/generate", body))
+        await writer.drain()
+        status, headers = await _read_response_head(reader)
+        data = await _read_body(reader, headers)
+        return status, headers, json.loads(data or b"{}")
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+def test_request_factory_v2_build_and_group():
+    f = _factory()
+    # variations: one payload -> K member requests + a group id
+    reqs, gid, spec = f.build({
+        "task": "variations", "prompt": "p", "seed": 4, "timesteps": 4,
+        "variants": 3,
+    })
+    assert spec.task == "variations" and gid is not None
+    assert len(reqs) == 3
+    rids = [r.rid for r in reqs]
+    assert len(set(rids)) == 3 and gid not in rids
+    for r in reqs[1:]:
+        np.testing.assert_array_equal(reqs[0].ctx, r.ctx)  # one prompt...
+        assert not np.array_equal(reqs[0].noise, r.noise)  # ...K seeds
+    # variant 0 is exactly the plain request for the same (prompt, seed)
+    single = f.make({"prompt": "p", "seed": 4, "timesteps": 4})
+    np.testing.assert_array_equal(reqs[0].ctx, single.ctx)
+    np.testing.assert_array_equal(reqs[0].noise, single.noise)
+
+    # img2img: strength-truncated schedule + deterministic init latent
+    img = {
+        "task": "img2img", "prompt": "p", "seed": 4, "timesteps": 6,
+        "init": {"seed": 8}, "strength": 0.4,
+    }
+    (r,), gid2, spec2 = f.build(img)
+    assert gid2 is None and not spec2.v1
+    assert (r.timesteps, r.base_timesteps) == (2, 6)
+    assert r.init_latent is not None and r.init_latent.shape == r.noise.shape
+    (r2,), _, _ = f.build(img)
+    np.testing.assert_array_equal(r.init_latent, r2.init_latent)
+    assert not np.array_equal(
+        r.init_latent, f.build({**img, "init": {"seed": 9}})[0][0].init_latent
+    )
+
+    # inpaint: mask spec materializes at latent geometry
+    (ri,), _, _ = f.build({
+        "task": "inpaint", "prompt": "p", "seed": 4, "timesteps": 4,
+        "init": {"seed": 8}, "mask": {"kind": "half", "frac": 0.25},
+    })
+    m = np.asarray(ri.mask).reshape(-1)
+    assert m.shape == (L,)
+    assert int((m == 0.0).sum()) == round(0.25 * L)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+
+    # typed rejections surface as SchemaError (a ValueError)
+    with pytest.raises(SchemaError) as ei:
+        f.build({"task": "img2img", "timesteps": 4})
+    assert ei.value.code == "missing" and ei.value.field == "init"
+
+
+def test_http_v2_tasks_end_to_end(engine):
+    """Acceptance: all three conditioned tasks served over HTTP — img2img
+    honours its strength truncation, inpaint retires through the masked
+    micro-step, and a K=3 variation request streams per-variant events and
+    one terminal with all digests."""
+    async def scenario():
+        driver = EngineDriver(engine, max_inflight=8).start()
+        frontend = HTTPFrontend(driver, _factory(), "127.0.0.1", 0)
+        await frontend.start()
+        serve_task = asyncio.create_task(frontend.serve_until_shutdown())
+        client = FrontendClient("127.0.0.1", frontend.port)
+
+        done = await client.generate(
+            task="img2img", prompt="v2", seed=1, timesteps=6,
+            init={"seed": 11}, strength=0.4,
+        )
+        assert done["event"] == "done"
+        assert done["steps"] == 2  # round(0.4 * 6) executed steps, not 6
+
+        done = await client.generate(
+            task="inpaint", prompt="v2", seed=2, timesteps=4,
+            init={"seed": 12}, mask={"kind": "half"},
+        )
+        assert done["event"] == "done" and done["steps"] == 4
+
+        events = []
+        async for ev in client.generate_stream(
+            task="variations", prompt="v2", seed=3, timesteps=4, variants=3,
+        ):
+            events.append(ev)
+        assert events[0]["event"] == "queued" and events[0]["variants"] == 3
+        v_done = [e for e in events if e["event"] == "variant_done"]
+        assert sorted(e["variant"] for e in v_done) == [0, 1, 2]
+        assert all(e["latent_digest"] for e in v_done)
+        term = events[-1]
+        assert term["event"] == "done" and term["variants"] == 3
+        assert len(term["variant_digests"]) == 3 and all(term["variant_digests"])
+        assert term["latent_digest"] and term["latency_s"] > 0
+
+        # variant 0 is bit-identical to the plain request it fans out from
+        solo = await client.generate(task="txt2img", prompt="v2", seed=3, timesteps=4)
+        assert solo["latent_digest"] == term["variant_digests"][0]
+
+        await client.shutdown()
+        summary = await serve_task
+        assert summary["drained"] and summary["open"] == 0
+
+    asyncio.run(scenario())
+    assert engine.n_active == 0 and engine.n_pending == 0
+
+
+def test_http_structured_400s_and_v1_deprecation_header(engine):
+    async def scenario():
+        driver = EngineDriver(engine, max_inflight=8).start()
+        frontend = HTTPFrontend(driver, _factory(), "127.0.0.1", 0)
+        await frontend.start()
+        serve_task = asyncio.create_task(frontend.serve_until_shutdown())
+        client = FrontendClient("127.0.0.1", frontend.port)
+
+        # v2 rejection: structured error object, no Deprecation header
+        status, headers, body = await _raw_post(
+            client, {"task": "img2img", "timesteps": 4}
+        )
+        assert status == 400 and "deprecation" not in headers
+        assert body["error"] == {
+            "code": "missing", "field": "init",
+            "detail": body["error"]["detail"],
+        }
+        status, _, body = await _raw_post(client, {"task": "txt2img", "bogus": 1})
+        assert status == 400 and body["error"]["code"] == "unknown"
+        assert body["error"]["field"] == "bogus"
+
+        # v1 flat payload: still served, flagged deprecated on every response
+        status, headers, body = await _raw_post(
+            client, {"prompt": "v1", "seed": 5, "timesteps": 3, "stream": False}
+        )
+        assert status == 200 and body["event"] == "done"
+        assert headers.get("deprecation") == 'version="v1"'
+        status, headers, body = await _raw_post(client, {"timesteps": 0})
+        assert status == 400 and headers.get("deprecation") == 'version="v1"'
+
+        await client.shutdown()
+        summary = await serve_task
+        assert summary["drained"]
 
     asyncio.run(scenario())
 

@@ -124,6 +124,42 @@ def test_explicit_plan_overrides_tier_shape():
     assert r.cache_threshold is not None and r.cache_threshold > 0
 
 
+def test_resolve_accepts_truncated_timestep_vector():
+    """Regression: an img2img strength truncation hands the resolver the
+    request's *actual* executed timestep vector, not the base step count.
+    A strength-0.4 cut of an 8-step schedule executes 3 steps — the plan
+    must be shaped for 3 steps (not 8), identically to resolving the bare
+    executed count, and the resolved spec must drive ``make_plan_arrays``
+    on the truncated schedule."""
+    p = _policy()
+    base = 8
+    stride = DCFG.timesteps_train // base
+    ts_full = (np.arange(base) * stride)[::-1]
+    n_exec = max(1, round(0.4 * base))  # = 3
+    ts_exec = ts_full[base - n_exec:]
+
+    for quality in ("draft", "balanced", "high", "exact"):
+        r_vec = p.resolve(ts_exec, quality=quality)
+        r_int = p.resolve(n_exec, quality=quality)
+        assert r_vec.plan == r_int.plan
+        assert r_vec.cache_threshold == r_int.cache_threshold
+        if r_vec.plan is not None:
+            r_vec.plan.validate(n_exec, N_UP)
+
+    r = p.resolve(ts_exec, quality="balanced")
+    lp = make_plan_arrays(
+        DCFG, n_exec, r.plan, 10,
+        threshold=r.threshold_spec(0.15), base_timesteps=base,
+    )
+    np.testing.assert_array_equal(lp.ts[:n_exec], ts_exec)
+    assert (lp.thr[n_exec:] == 0).all()
+
+    with pytest.raises(ValueError):
+        p.resolve(np.zeros((2, 2)))  # not a 1-D schedule
+    with pytest.raises(ValueError):
+        p.resolve(np.array([], dtype=np.int64))
+
+
 # ---------------------------------------------------------------------------
 # Calibration profiles
 # ---------------------------------------------------------------------------

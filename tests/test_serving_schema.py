@@ -1,0 +1,200 @@
+"""v2 request-schema validation: task union, typed errors, v1 shim.
+
+Host-only tests of ``repro.serving.schema`` — no jax, no engine.  Pins the
+public contract of the redesigned request surface: every rejection is a
+typed ``SchemaError`` with a stable ``(code, field)`` pair the frontend
+serializes into structured 400 bodies, v1 flat payloads upgrade onto the
+``txt2img`` arm losslessly, and the img2img strength->schedule resolution
+happens here (and only here).
+"""
+import pytest
+
+from repro.serving.schema import (
+    MAX_VARIANTS,
+    SchemaError,
+    TASKS,
+    is_v1,
+    parse_request,
+    upgrade_v1,
+)
+
+MAX_STEPS = 8
+
+
+def parse(payload):
+    return parse_request(payload, max_steps=MAX_STEPS)
+
+
+def err(payload) -> SchemaError:
+    with pytest.raises(SchemaError) as ei:
+        parse(payload)
+    return ei.value
+
+
+# ---------------------------------------------------------------------------
+# Task union + common fields
+# ---------------------------------------------------------------------------
+
+
+def test_txt2img_minimal_defaults():
+    spec = parse({"task": "txt2img"})
+    assert spec.task == "txt2img"
+    assert spec.timesteps == spec.base_timesteps == MAX_STEPS
+    assert spec.variants == 1 and not spec.v1
+    assert spec.strength is None and spec.init_seed is None and spec.mask_spec is None
+    assert spec.allow_cache and spec.stream and not spec.pas
+
+
+def test_every_task_parses():
+    payloads = {
+        "txt2img": {},
+        "img2img": {"init": {"seed": 3}, "strength": 0.5},
+        "inpaint": {"init": {"seed": 3}, "mask": {"kind": "ones"}},
+        "variations": {"variants": 3},
+    }
+    for task, extra in payloads.items():
+        spec = parse({"task": task, "prompt": "p", "timesteps": 6, **extra})
+        assert spec.task == task and spec.base_timesteps == 6
+
+
+def test_unknown_task_and_unknown_field_are_typed():
+    e = err({"task": "upscale"})
+    assert (e.code, e.field) == ("invalid", "task")
+    e = err({"task": "txt2img", "stregnth": 0.5})
+    assert e.code == "unknown" and e.field == "stregnth"
+
+
+def test_task_scoped_fields_are_forbidden_elsewhere():
+    e = err({"task": "txt2img", "strength": 0.5})
+    assert (e.code, e.field) == ("forbidden", "strength")
+    e = err({"task": "img2img", "init": {"seed": 1}, "variants": 3})
+    assert (e.code, e.field) == ("forbidden", "variants")
+    e = err({"task": "variations", "variants": 3, "mask": {"kind": "ones"}})
+    assert (e.code, e.field) == ("forbidden", "mask")
+
+
+@pytest.mark.parametrize("field,bad", [
+    ("seed", "7"), ("seed", 1.5), ("seed", True),
+    ("timesteps", 0), ("timesteps", MAX_STEPS + 1),
+    ("prompt", 3), ("pas", "yes"), ("stream", 1), ("allow_cache", "no"),
+])
+def test_common_field_validation(field, bad):
+    e = err({"task": "txt2img", field: bad})
+    assert e.code == "invalid" and e.field == field
+    assert e.as_dict() == {"code": e.code, "field": field, "detail": e.detail}
+
+
+def test_schema_error_is_a_value_error():
+    # pre-schema callers catch ValueError around request construction
+    with pytest.raises(ValueError):
+        parse({"task": "nope"})
+
+
+# ---------------------------------------------------------------------------
+# img2img: strength -> truncated schedule
+# ---------------------------------------------------------------------------
+
+
+def test_strength_resolves_executed_steps():
+    for strength, base, want in [(0.4, 5, 2), (0.75, 8, 6), (1.0, 6, 6), (0.01, 6, 1)]:
+        spec = parse({
+            "task": "img2img", "timesteps": base,
+            "init": {"seed": 1}, "strength": strength,
+        })
+        assert (spec.timesteps, spec.base_timesteps) == (want, base), strength
+    # default strength is 0.75
+    spec = parse({"task": "img2img", "timesteps": 8, "init": {"seed": 1}})
+    assert spec.strength == 0.75 and spec.timesteps == 6
+
+
+@pytest.mark.parametrize("bad", [0.0, -0.5, 1.5, "high", True])
+def test_strength_rejections(bad):
+    e = err({"task": "img2img", "init": {"seed": 1}, "strength": bad})
+    assert (e.code, e.field) == ("invalid", "strength")
+
+
+def test_img2img_requires_init_handle():
+    assert err({"task": "img2img"}).code == "missing"
+    e = err({"task": "img2img", "init": {"path": "x.png"}})
+    assert e.field == "init"
+    e = err({"task": "img2img", "init": {"seed": 1, "scale": 2}})
+    assert (e.code, e.field) == ("unknown", "init")
+
+
+# ---------------------------------------------------------------------------
+# inpaint: mask specs
+# ---------------------------------------------------------------------------
+
+
+def test_mask_kinds():
+    for mask in ({"kind": "ones"}, {"kind": "half", "frac": 0.25},
+                 {"kind": "explicit", "values": [0.0, 1.0, 0.5]}):
+        spec = parse({"task": "inpaint", "init": {"seed": 1}, "mask": mask})
+        assert spec.mask_spec == mask
+
+
+@pytest.mark.parametrize("mask,code", [
+    (None, "missing"),
+    ({"kind": "checker"}, "invalid"),
+    ({"kind": "half", "frac": 2.0}, "invalid"),
+    ({"kind": "half", "rows": 3}, "unknown"),
+    ({"kind": "explicit", "values": []}, "invalid"),
+    ({"kind": "explicit", "values": [0.5, 1.5]}, "invalid"),
+    ({"kind": "ones", "frac": 0.5}, "unknown"),
+])
+def test_mask_rejections(mask, code):
+    payload = {"task": "inpaint", "init": {"seed": 1}}
+    if mask is not None:
+        payload["mask"] = mask
+    e = err(payload)
+    assert e.field == "mask" and e.code == code
+
+
+# ---------------------------------------------------------------------------
+# variations
+# ---------------------------------------------------------------------------
+
+
+def test_variants_bounds():
+    assert parse({"task": "variations", "variants": 2}).variants == 2
+    assert parse({"task": "variations", "variants": MAX_VARIANTS}).variants == MAX_VARIANTS
+    for bad in (0, 1, MAX_VARIANTS + 1):
+        e = err({"task": "variations", "variants": bad})
+        assert (e.code, e.field) == ("invalid", "variants")
+    # variants is required (defaulting K silently would hide fan-out cost)
+    assert err({"task": "variations"}).field == "variants"
+
+
+# ---------------------------------------------------------------------------
+# v1 compat shim
+# ---------------------------------------------------------------------------
+
+
+def test_v1_detection_and_upgrade():
+    flat = {"prompt": "p", "seed": 5, "timesteps": 6, "pas": True, "junk": 1}
+    assert is_v1(flat) and not is_v1({**flat, "task": "txt2img"})
+    up = upgrade_v1(flat)
+    assert up["task"] == "txt2img" and "junk" not in up
+    spec = parse(flat)
+    assert spec.v1 and spec.task == "txt2img"
+    assert (spec.prompt, spec.seed, spec.timesteps, spec.pas) == ("p", 5, 6, True)
+    # v2 stays strict about the same unknown key v1 tolerates
+    assert err({**flat, "task": "txt2img"}).code == "unknown"
+
+
+def test_v1_and_v2_agree_on_shared_fields():
+    flat = {"prompt": "x", "seed": 9, "timesteps": 4, "quality": "high"}
+    v1 = parse(flat)
+    v2 = parse({**flat, "task": "txt2img"})
+    assert v1.v1 and not v2.v1
+    assert (
+        (v1.prompt, v1.seed, v1.timesteps, v1.quality)
+        == (v2.prompt, v2.seed, v2.timesteps, v2.quality)
+    )
+
+
+def test_non_dict_payload():
+    e = err([1, 2])
+    assert (e.code, e.field) == ("invalid", "body")
+    assert e.code in ("invalid", "missing", "unknown", "forbidden")
+    assert set(TASKS) == {"txt2img", "img2img", "inpaint", "variations"}

@@ -1,0 +1,100 @@
+"""Regenerate or verify the conditioned-scenario goldens under tests/golden/.
+
+The conditioned-pipeline counterpart of ``tools/regen_golden_latents.py``:
+same canonical XLA environment (pinned below, before jax loads), same
+subprocess-check discipline, but over the img2img / inpaint / variation
+scenario stream defined in ``repro.serving.scenarios``.
+
+Regenerate after any *intentional* numerics change to the sampler, lanes,
+engine, or cache (and say so in the PR):
+
+    PYTHONPATH=src python tools/regen_golden_scenarios.py
+
+Verify (exit 0 iff every execution family is bit-exact):
+
+    PYTHONPATH=src python tools/regen_golden_scenarios.py --check
+
+``GOLDEN_ATOL`` loosens the check to a tolerance for hardware-drift
+emergencies, exactly as in the txt2img harness.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# canonical golden environment — must be set before jax initializes
+os.environ["XLA_FLAGS"] = "--xla_cpu_multi_thread_eigen=false"
+os.environ.pop("XLA_FLAGS_EXTRA", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.serving import scenarios as S  # noqa: E402
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+
+def _compute():
+    params = S.golden_params()
+    return {
+        "pas_denoise_scheduled": S.run_straight_line(params),
+        "engine[cache=off]": S.run_engine(params, cache_mode="off"),
+        "engine[cache=cross,threshold=0]": S.run_engine(
+            params, cache_mode="cross", cache_threshold=0.0
+        ),
+    }
+
+
+def check(path: str) -> int:
+    line_g, engine_g = S.load_golden(path)
+    want = {
+        "pas_denoise_scheduled": line_g,
+        "engine[cache=off]": engine_g,
+        "engine[cache=cross,threshold=0]": engine_g,  # threshold 0 never hits
+    }
+    atol = float(os.environ.get("GOLDEN_ATOL", "0"))  # hardware-drift escape hatch
+    got = _compute()
+    failures = 0
+    for label, latents in got.items():
+        for name in sorted(want[label]):
+            drift = float(np.abs(latents[name] - want[label][name]).max())
+            ok = np.array_equal(latents[name], want[label][name]) or drift <= atol
+            status = (
+                "bit-exact" if drift == 0 and ok
+                else f"within atol={atol:g} max|diff|={drift:.2e}" if ok
+                else f"DRIFTED max|diff|={drift:.2e}"
+            )
+            print(f"[golden] {label} {name}: {status}")
+            failures += not ok
+    return 1 if failures else 0
+
+
+def write(path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    line, engine = S.save_golden(path)
+    print(f"[golden] wrote {os.path.relpath(path)}")
+    for name in sorted(line):
+        drift = float(np.abs(line[name] - engine[name]).max())
+        print(
+            f"[golden]   {name} shape={line[name].shape} "
+            f"line-vs-engine max|diff|={drift:.2e}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--check", action="store_true",
+        help="verify the existing goldens bit-exactly instead of rewriting them",
+    )
+    args = ap.parse_args()
+    path = os.path.join(GOLDEN_DIR, S.GOLDEN_FILE)
+    if args.check:
+        sys.exit(check(path))
+    write(path)
+
+
+if __name__ == "__main__":
+    main()

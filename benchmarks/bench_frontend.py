@@ -36,10 +36,7 @@ import argparse
 import asyncio
 import json
 
-import jax
-
 from benchmarks.common import emit
-from repro.common.types import DiffusionConfig
 from repro.configs import get_unet_config
 from repro.models import unet as U
 from repro.serving import (
@@ -47,9 +44,8 @@ from repro.serving import (
     EngineDriver,
     GenRequest,
     HTTPFrontend,
-    PlanAwareScheduler,
     RequestFactory,
-    make_serving_engine,
+    build_engine,
 )
 from repro.serving.client import FrontendClient, make_payloads, run_load
 from repro.serving.metrics import ServingMetrics
@@ -116,10 +112,7 @@ def main() -> None:
         raise SystemExit(f"--lanes {args.lanes} must divide over --shards {args.shards}")
     max_inflight = args.max_inflight or 4 * args.lanes
 
-    ucfg = get_unet_config("sd_toy")
-    n_up = U.n_up_steps(ucfg)
-    dcfg = DiffusionConfig(timesteps_sample=args.t_hi)
-    params = U.init_unet(jax.random.key(args.seed), ucfg)
+    n_up = U.n_up_steps(get_unet_config("sd_toy"))
     cfg = EngineConfig(
         n_lanes=args.lanes,
         max_steps=args.t_hi,
@@ -127,11 +120,14 @@ def main() -> None:
         l_refine=min(2, n_up),
         decode_images=False,
         n_shards=args.shards,
+        seed=args.seed,
+        max_inflight=max_inflight,
     )
-    engine = make_serving_engine(
-        ucfg, dcfg, params, None, cfg, scheduler=PlanAwareScheduler(window=4)
-    )
-    factory = RequestFactory(ucfg, dcfg, cfg)
+    # the audited construction path (repro.serving.config) — same weights
+    # and scheduler defaults as the serve CLI for this config
+    bundle = build_engine(cfg)
+    engine = bundle.engine
+    factory = RequestFactory(bundle.ucfg, bundle.dcfg, cfg)
 
     payloads = make_payloads(args.requests, args.t_lo, args.t_hi, "mixed", args.seed)
 

@@ -3,18 +3,72 @@ cost only) is NOT timed; what matters on this host is the XLA-jitted
 reference math the kernels implement.  We time the jnp oracles to give a
 CPU-side throughput sanity row per kernel, plus the uniconv-vs-lax.conv
 parity check that the address-centric lowering costs nothing extra.
+
+``--json PATH`` writes the benchmark-trajectory JSON (`BENCH_kernels.json`)
+for the CI gate (``tools/compare_bench.py``).  Gated metrics are
+machine-portable: the uniconv/lax ratio (inverted to "higher is better" so
+the floor gate reads naturally) and the 0/1 backend-dispatch parity bit
+(the pallas :class:`~repro.models.backend.KernelBackend` agreeing with the
+xla one at a served shape).  Absolute latencies ride along as headline.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_kernels.py
+  PYTHONPATH=src:. python benchmarks/bench_kernels.py --json BENCH_kernels.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_jitted
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.uniconv.ref import uniconv_ref
 
 
+def bench_dispatch_parity() -> float:
+    """0/1 bit: the pallas backend object the engine dispatches through
+    agrees with the xla one on every primitive at a served sd_toy shape."""
+    from repro.models.backend import resolve_backend
+
+    xla, pallas = resolve_backend("xla"), resolve_backend("pallas")
+    rng = np.random.default_rng(0)
+    l, c, groups, heads = 64, 64, 8, 2
+    x = rng.normal(size=(2, l, c)).astype(np.float32)
+    wk = (rng.normal(size=(9, c, c)) * 0.05).astype(np.float32)
+    b = rng.normal(size=(c,)).astype(np.float32)
+    p = {"scale": b + 1.0, "bias": b * 0.1}
+    o_proj = (rng.normal(size=(c, c)) * c**-0.5).astype(np.float32)
+    checks = [
+        (pallas.conv(wk, b, x, (8, 8), 3), xla.conv(wk, b, x, (8, 8), 3), 2e-5),
+        (
+            pallas.group_norm(x, p, groups, silu=True),
+            xla.group_norm(x, p, groups, silu=True),
+            2e-5,
+        ),
+        (
+            pallas.attention(x, x, x, o_proj, heads),
+            xla.attention(x, x, x, o_proj, heads),
+            1e-4,
+        ),
+    ]
+    ok = all(
+        float(jnp.max(jnp.abs(got - ref))) <= atol for got, ref, atol in checks
+    )
+    return 1.0 if ok else 0.0
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json", type=str, default=None, metavar="PATH",
+        help="write the benchmark-trajectory JSON (BENCH_kernels.json)",
+    )
+    args = ap.parse_args()
+
     # uniconv storage format vs native lax.conv on identical math
     h = w = 64
     cin = cout = 128
@@ -43,6 +97,31 @@ def main():
     flops = 4 * 8 * 2048 * 2048 * 64
     emit("kernels", "attention_ref/latency", round(t * 1e3, 2), "ms", "B1 H8 S2048 D64")
     emit("kernels", "attention_ref/gflops", round(flops / t / 1e9, 1), "GFLOP/s")
+
+    parity = bench_dispatch_parity()
+    emit("kernels", "backend_dispatch_parity", parity, "",
+         "pallas KernelBackend vs xla at a served shape (1.0 = agree)")
+
+    if args.json:
+        out = {
+            "bench": "kernels",
+            "config": {"conv": f"{h}x{w}x{cin}->{cout}", "attn": "B1 H8 S2048 D64"},
+            "gates": {
+                # inverted overhead (t_lax / t_uni): higher is better, so the
+                # compare_bench floor gate catches uniconv regressions
+                "uniconv_vs_lax_ratio": round(t_lax / t_uni, 3),
+                "backend_dispatch_parity": parity,
+            },
+            "headline": {
+                "uniconv_ref_latency_ms": round(t_uni * 1e3, 3),
+                "lax_conv_latency_ms": round(t_lax * 1e3, 3),
+                "attention_ref_latency_ms": round(t * 1e3, 3),
+                "attention_ref_gflops": round(flops / t / 1e9, 1),
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        emit("kernels", "trajectory_json", args.json, "", "written")
 
 
 if __name__ == "__main__":

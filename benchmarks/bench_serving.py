@@ -26,10 +26,18 @@ occupancy balance and — with ``--cache`` — per-shard hit rates.  Needs N
 visible devices: on CPU run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--kernels pallas`` switches to the Pallas-backend trajectory: a small
+closed-loop stream served by a ``backend="pallas"`` engine (interpret mode
+off-TPU — a correctness/viability line, not a speed line) and parity-checked
+against the xla engine on identical requests.  Its gates are stability
+ratios (completion, xla agreement within the differential tolerance), so
+the line stays machine-portable even though interpreted kernels are slow.
+
 ``--json PATH`` writes the machine-readable benchmark trajectory
-(`BENCH_serving.json`): headline throughput/latency numbers plus the
-machine-portable ratio gates the CI benchmark job compares against the
-checked-in baseline (see ``tools/compare_bench.py``).
+(`BENCH_serving.json`, or `BENCH_serving_pallas.json` under ``--kernels
+pallas``): headline throughput/latency numbers plus the machine-portable
+ratio gates the CI benchmark job compares against the checked-in baseline
+(see ``tools/compare_bench.py``).
 
 Usage:
   PYTHONPATH=src:. python benchmarks/bench_serving.py            # full sweep
@@ -228,6 +236,93 @@ def bench_sharded(engine_1, engine_n, engine_n_cache, ucfg, args, rate) -> dict:
     return row
 
 
+#: documented pallas-vs-xla tolerance (see tests/test_serving_differential.py)
+PALLAS_ATOL = 5e-4
+
+
+def bench_pallas(args) -> None:
+    """Pallas-backend trajectory: a small closed-loop stream served by a
+    ``backend="pallas"`` engine, parity-checked against the xla engine on
+    identical requests.
+
+    Off-TPU the Pallas kernels run in interpret mode — orders of magnitude
+    slower than compiled XLA — so this line gates on *stability* ratios
+    (completion, xla agreement within ``PALLAS_ATOL``) rather than speed.
+    Absolute per-step times ride along under ``headline`` so the trajectory
+    still shows the interpret/compiled gap (and, on TPU, the real one).
+    """
+    n_req, lanes, t_lo, t_hi = (4, 2, 3, 5) if args.smoke else (6, 2, 3, 6)
+    ucfg = get_unet_config("sd_toy")
+    n_up = U.n_up_steps(ucfg)
+    dcfg = DiffusionConfig(timesteps_sample=t_hi)
+    params = U.init_unet(jax.random.key(args.seed), ucfg)
+    # closed loop (rate=1e9 => everything queued up front): wall time is pure
+    # serving time, and both backends see the identical request sequence
+    reqs = make_stream(ucfg, n_req, 1e9, t_lo, t_hi, False, args.seed, mixed=True)
+
+    def build(backend: str) -> DiffusionEngine:
+        cfg = EngineConfig(
+            n_lanes=lanes, max_steps=t_hi, l_sketch=min(3, n_up),
+            l_refine=min(2, n_up), decode_images=False, backend=backend,
+        )
+        return DiffusionEngine(
+            ucfg, dcfg, params, None, cfg, scheduler=PlanAwareScheduler(window=4)
+        )
+
+    lat: dict[str, dict] = {}
+    summaries: dict[str, dict] = {}
+    for backend in ("xla", "pallas"):
+        done, s = build(backend).run(reqs, realtime=False)
+        lat[backend] = {d.rid: d.latent for d in done}
+        summaries[backend] = s
+        step = s["step_time_by_backend"][backend]
+        emit("serving", f"kernels={backend}/completed", len(done), "req")
+        emit("serving", f"kernels={backend}/mean_step_s", step["mean_s"], "s")
+        emit("serving", f"kernels={backend}/throughput_req_s", s["throughput_req_s"], "req/s")
+
+    completed = len(lat["pallas"])
+    max_diff = (
+        max(
+            float(np.max(np.abs(lat["pallas"][rid] - lat["xla"][rid])))
+            for rid in lat["xla"]
+            if rid in lat["pallas"]
+        )
+        if completed
+        else float("inf")
+    )
+    agreement = 1.0 if (completed == n_req and max_diff <= PALLAS_ATOL) else 0.0
+    emit(
+        "serving", "kernels=pallas/max_abs_diff_vs_xla", round(max_diff, 8), "",
+        f"tolerance {PALLAS_ATOL:g}",
+    )
+    emit(
+        "serving", "acceptance/pallas_xla_agreement", agreement, "",
+        "1.0 = every request completed within tolerance of the xla engine",
+    )
+
+    if args.json:
+        out = {
+            "bench": "serving_pallas",
+            "config": {
+                "requests": n_req, "lanes": lanes, "t_lo": t_lo, "t_hi": t_hi,
+                "seed": args.seed, "atol": PALLAS_ATOL,
+            },
+            "gates": {
+                "pallas_completed_ratio": round(completed / n_req, 3),
+                "pallas_xla_agreement": agreement,
+            },
+            "headline": {
+                "pallas_max_abs_diff_vs_xla": max_diff,
+                "pallas_mean_step_s": summaries["pallas"]["step_time_by_backend"]["pallas"]["mean_s"],
+                "xla_mean_step_s": summaries["xla"]["step_time_by_backend"]["xla"]["mean_s"],
+                "pallas_throughput_req_s": summaries["pallas"]["throughput_req_s"],
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        emit("serving", "trajectory_json", args.json, "", "written")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=42)
@@ -258,12 +353,22 @@ def main() -> None:
         "CPU set XLA_FLAGS=--xla_force_host_platform_device_count=8)",
     )
     ap.add_argument(
+        "--kernels", choices=["xla", "pallas"], default="xla",
+        help="kernel backend; pallas runs the dedicated small parity/"
+        "stability trajectory instead of the throughput sweep (interpret "
+        "mode is orders of magnitude slower than compiled XLA on CPU)",
+    )
+    ap.add_argument(
         "--json", type=str, default=None, metavar="PATH",
         help="write the benchmark-trajectory JSON (BENCH_serving.json)",
     )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
     args = ap.parse_args()
+
+    if args.kernels == "pallas":
+        bench_pallas(args)
+        return
 
     if args.smoke:
         args.requests, args.lanes, args.t_lo, args.t_hi = 6, 2, 3, 5

@@ -55,13 +55,15 @@ def cfg_unet_step(
     entry_step: int = 0,
     entry_feat: jax.Array | None = None,  # [2B, ...] cached main-branch feature
     capture: tuple[int, ...] = (),
+    backend=None,  # KernelBackend instance or name; None = "xla"
 ) -> tuple[jax.Array, dict[int, jax.Array]]:
     """One classifier-free-guided U-Net invocation on the CFG-doubled batch.
 
     Shared by the scan-based :func:`pas_denoise` (scalar ``t``) and the
     serving engine's micro-step (per-lane ``t`` vector).  Returns the guided
     eps prediction [B, L, C] and the captured main-branch features in the
-    [2B, ...] cond/uncond-stacked layout.
+    [2B, ...] cond/uncond-stacked layout.  ``backend`` is forwarded to
+    :func:`repro.models.unet.unet_apply` (the kernel-backend chokepoint).
     """
     b = x.shape[0]
     x2 = jnp.concatenate([x, x], axis=0)
@@ -70,6 +72,7 @@ def cfg_unet_step(
     eps2, cap = U.unet_apply(
         ucfg, params, x2, t2, ctx2,
         entry_step=entry_step, entry_feat=entry_feat, capture_steps=capture,
+        backend=backend,
     )
     e_c, e_u = jnp.split(eps2, 2, axis=0)
     return e_u + guidance * (e_c - e_u), cap
@@ -126,6 +129,7 @@ def pas_denoise_scheduled(
     mask: jax.Array | None = None,  # [B, L, 1] inpaint mask (1 = generate)
     x_init: jax.Array | None = None,  # [B, L, C] known latent under the mask
     noise0: jax.Array | None = None,  # [B, L, C] fixed noise for the known region
+    backend=None,  # kernel backend forwarded to every U-Net call
 ) -> jax.Array:
     """Straight-line PAS sampling over an *explicit* timestep schedule.
 
@@ -177,6 +181,7 @@ def pas_denoise_scheduled(
         return cfg_unet_step(
             ucfg, params, guidance, x, t, ctx2,
             entry_step=entry_step, entry_feat=entry_feat, capture=capture,
+            backend=backend,
         )
 
     f_sk0 = jnp.zeros(_feat_shape(ucfg, e_sk, b2), x_t.dtype)
@@ -231,6 +236,8 @@ def pas_denoise(
     x_t: jax.Array,  # [B, L, C] initial noise
     ctx_cond: jax.Array,
     ctx_uncond: jax.Array,
+    *,
+    backend=None,  # kernel backend forwarded to every U-Net call
 ) -> jax.Array:
     """Run the full PAS sampling loop. ``plan=None`` -> original sampler."""
     sched = D.make_schedule(dcfg)
@@ -257,6 +264,7 @@ def pas_denoise(
         return cfg_unet_step(
             ucfg, params, guidance, x, t, ctx2,
             entry_step=entry_step, entry_feat=entry_feat, capture=capture,
+            backend=backend,
         )
 
     f_sk0 = jnp.zeros(_feat_shape(ucfg, e_sk, b2), x_t.dtype)

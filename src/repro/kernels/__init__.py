@@ -1,3 +1,51 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's Sec. IV hardware co-optimizations.
+
+Four kernel packages, each laid out as ``kernel.py`` (the Pallas
+implementation) + ``ops.py`` (jitted public wrapper; interpret mode on
+CPU via :func:`repro.kernels.common.interpret_default`) + ``ref.py``
+(pure-jnp oracle for parity tests):
+
+* ``uniconv`` — address-centric K*K convolution on the (L, C) layout
+  (Sec. IV-B);
+* ``flash_attention`` — 2-stage streaming softmax attention with the
+  online max/exp-sum update (Sec. IV-C, Eqs. 5-6);
+* ``stream_norm`` — one-pass layer/rms norm (Eq. 4) plus
+  ``stream_group_norm``, the U-Net group norm with an optional fused
+  SiLU epilogue;
+* ``fused_matmul`` — matmul with fused activation epilogues.
+
+:data:`KERNEL_REGISTRY` maps kernel names to ``(pallas_impl, ref_impl)``
+pairs; the model-side dispatch layer (``repro.models.backend``) builds the
+``"pallas"`` :class:`~repro.models.backend.KernelBackend` from it.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.fused_matmul.ops import fused_matmul
+from repro.kernels.fused_matmul.ref import fused_matmul_ref
+from repro.kernels.stream_norm.ops import stream_group_norm, stream_norm
+from repro.kernels.stream_norm.ref import stream_group_norm_ref, stream_norm_ref
+from repro.kernels.uniconv.ops import uniconv
+from repro.kernels.uniconv.ref import uniconv_ref
+
+#: kernel name -> (jitted Pallas wrapper, pure-jnp oracle)
+KERNEL_REGISTRY = {
+    "uniconv": (uniconv, uniconv_ref),
+    "flash_attention": (flash_attention, flash_attention_ref),
+    "stream_norm": (stream_norm, stream_norm_ref),
+    "stream_group_norm": (stream_group_norm, stream_group_norm_ref),
+    "fused_matmul": (fused_matmul, fused_matmul_ref),
+}
+
+__all__ = [
+    "KERNEL_REGISTRY",
+    "flash_attention",
+    "flash_attention_ref",
+    "fused_matmul",
+    "fused_matmul_ref",
+    "stream_group_norm",
+    "stream_group_norm_ref",
+    "stream_norm",
+    "stream_norm_ref",
+    "uniconv",
+    "uniconv_ref",
+]

@@ -99,21 +99,25 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    b, h, s, dh = q.shape
-    hkv = k.shape[1]
+    """Q may attend over a KV sequence of a *different* length (cross-attention):
+    ``q`` is [B, H, Sq, Dh] and ``k``/``v`` are [B, Hkv, Skv, Dh].  Positional
+    masking (``causal`` / ``window``) assumes aligned positions and is only
+    meaningful when ``Sq == Skv``."""
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
     rep = h // hkv
     if rep > 1:  # GQA: expand KV heads (kernel-side broadcast)
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
 
-    bq = min(block_q, s)
-    bk = min(block_k, s)
-    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
-    nq, nk = s // bq, s // bk
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    nq, nk = sq // bq, skv // bk
 
-    qf = q.reshape(b * h, s, dh)
-    kf = k.reshape(b * h, s, dh)
-    vf = v.reshape(b * h, s, dh)
+    qf = q.reshape(b * h, sq, dh)
+    kf = k.reshape(b * h, skv, dh)
+    vf = v.reshape(b * h, skv, dh)
 
     kernel = functools.partial(
         _flash_kernel,
@@ -134,7 +138,7 @@ def flash_attention(
             pl.BlockSpec((1, bk, dh), lambda bh, qi, ki: (bh, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -142,4 +146,4 @@ def flash_attention(
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(b, h, s, dh)
+    return out.reshape(b, h, sq, dh)

@@ -23,9 +23,8 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
 ) -> jax.Array:
-    s = q.shape[2]
-    bq = pick_block(s, block_q)
-    bk = pick_block(s, block_k)
+    bq = pick_block(q.shape[2], block_q)
+    bk = pick_block(k.shape[2], block_k)  # KV length may differ (cross-attention)
     return _kernel(
         q, k, v,
         causal=causal, window=window, softcap=softcap,

@@ -14,16 +14,16 @@ def flash_attention_ref(
     window: int = 0,
     softcap: float = 0.0,
 ) -> jax.Array:
-    b, h, s, dh = q.shape
-    hkv = k.shape[1]
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
     k = jnp.repeat(k, h // hkv, axis=1)
     v = jnp.repeat(v, h // hkv, axis=1)
     logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / dh**0.5
     if softcap > 0:
         logits = softcap * jnp.tanh(logits / softcap)
-    qp = jnp.arange(s)[:, None]
-    kp = jnp.arange(s)[None, :]
-    mask = jnp.ones((s, s), bool)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
     if causal:
         mask &= kp <= qp
     if window > 0:

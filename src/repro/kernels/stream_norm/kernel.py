@@ -8,6 +8,12 @@ eliminates.  RMSNorm shares the datapath with the mean-branch muxed off
 (the reconfigurable-VPU story of Sec. IV-D).
 
 Grid: row tiles; the feature dimension stays VMEM-resident.
+
+``stream_group_norm`` is the same one-pass datapath lifted to the U-Net's
+``[B, L, C]`` group norm (statistics span L *and* the channels of each
+group), with an optional fused SiLU epilogue so the pervasive
+``silu(group_norm(x))`` pattern never round-trips the activation through
+HBM between norm and nonlinearity (the MII-style fusion).
 """
 from __future__ import annotations
 
@@ -63,5 +69,47 @@ def stream_norm(
         ],
         out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, scale, bias)
+
+
+def _group_norm_kernel(x_ref, scale_ref, bias_ref, o_ref, *, groups: int, eps: float, silu: bool):
+    x = x_ref[0].astype(jnp.float32)  # [l, c]
+    l, c = x.shape
+    xg = x.reshape(l, groups, c // groups)
+    # NCA: one pass produces both characteristics per (batch, group)
+    s = jnp.mean(xg, axis=(0, 2), keepdims=True)
+    sq = jnp.mean(xg * xg, axis=(0, 2), keepdims=True)
+    var = jnp.maximum(sq - s * s, 0.0)
+    y = (xg - s) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(l, c) * scale_ref[...].astype(jnp.float32) + bias_ref[...].astype(jnp.float32)
+    if silu:
+        y = y * jax.nn.sigmoid(y)  # fused epilogue: no HBM round-trip
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def stream_group_norm(
+    x: jax.Array,  # [B, L, C]
+    scale: jax.Array,  # [C]
+    bias: jax.Array,  # [C]
+    *,
+    groups: int,
+    eps: float = 1e-5,
+    silu: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    b, l, c = x.shape
+    assert c % groups == 0, (c, groups)
+    kernel = functools.partial(_group_norm_kernel, groups=groups, eps=eps, silu=silu)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, l, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, l, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, c), x.dtype),
         interpret=interpret,
     )(x, scale, bias)

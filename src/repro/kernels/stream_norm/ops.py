@@ -1,4 +1,4 @@
-"""Jitted public wrapper for stream_norm (handles leading batch dims)."""
+"""Jitted public wrappers for stream_norm / stream_group_norm."""
 from __future__ import annotations
 
 import functools
@@ -6,6 +6,7 @@ import functools
 import jax
 
 from repro.kernels.common import interpret_default
+from repro.kernels.stream_norm.kernel import stream_group_norm as _gn_kernel
 from repro.kernels.stream_norm.kernel import stream_norm as _kernel
 
 
@@ -17,3 +18,11 @@ def stream_norm(x, scale, bias=None, *, mode: str = "layernorm", eps: float = 1e
         x2, scale, bias, mode=mode, eps=eps, block_m=block_m, interpret=interpret_default()
     )
     return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "eps", "silu"))
+def stream_group_norm(x, scale, bias, *, groups: int, eps: float = 1e-5, silu: bool = False):
+    """x: [B, L, C] — group norm with an optional fused SiLU epilogue."""
+    return _gn_kernel(
+        x, scale, bias, groups=groups, eps=eps, silu=silu, interpret=interpret_default()
+    )

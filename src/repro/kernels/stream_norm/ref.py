@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for stream_norm."""
+"""Pure-jnp oracles for stream_norm / stream_group_norm."""
 from __future__ import annotations
 
 import jax
@@ -18,4 +18,25 @@ def stream_norm_ref(
     else:
         ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
         y = xf * jax.lax.rsqrt(ms + eps) * scale
+    return y.astype(x.dtype)
+
+
+def stream_group_norm_ref(
+    x: jax.Array,  # [B, L, C]
+    scale: jax.Array,
+    bias: jax.Array,
+    *,
+    groups: int,
+    eps: float = 1e-5,
+    silu: bool = False,
+) -> jax.Array:
+    b, l, c = x.shape
+    xg = x.astype(jnp.float32).reshape(b, l, groups, c // groups)
+    s = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    sq = jnp.mean(xg * xg, axis=(1, 3), keepdims=True)
+    var = jnp.maximum(sq - s * s, 0.0)
+    y = (xg - s) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(b, l, c) * scale + bias
+    if silu:
+        y = jax.nn.silu(y)
     return y.astype(x.dtype)

@@ -26,6 +26,13 @@ calibration profile (``examples/pas_calibration.py --profile-out``) and
 refines the thresholds per timestep bucket.  Under ``--http`` the quality
 knob also arrives per request in the payload (``"quality": "draft"``).
 
+``--kernels {xla,pallas}`` selects the kernel backend for the jitted hot
+path (``repro.models.backend``): ``xla`` is the inline reference — bit-exact
+with builds predating the backend switch — and ``pallas`` routes Uni-conv,
+the fused GroupNorm+SiLU and flash attention through the Pallas kernels
+(interpret mode off-TPU).  The backend is engine-wide: payloads may carry
+``"kernels"`` only to *assert* it (mismatch = 400 ``forbidden``).
+
 ``--shards N`` shards the continuous engine's lane axis over N devices
 (``repro.serving.ShardedDiffusionEngine``): each device owns ``batch / N``
 lanes, branch classes are chosen per shard, and the feature cache splits
@@ -60,30 +67,26 @@ import dataclasses
 import os
 import signal
 import time
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.types import DiffusionConfig
-from repro.configs import ARCH_IDS, get_lm_config, get_unet_config
+from repro.configs import ARCH_IDS, get_lm_config
 from repro.launch.steps import get_adapter
 from repro.models import unet as U
-from repro.models import vae as V
 from repro.serving import (
-    CacheAwareScheduler,
-    EngineConfig,
     EngineDriver,
     GenRequest,
     HTTPFrontend,
-    PlanAwareScheduler,
     QualityPolicy,
     RequestFactory,
     default_pas_plan as _serving_default_pas_plan,
-    make_serving_engine,
     serve_static,
 )
+from repro.serving import config as CFG
 
 
 # ---------------------------------------------------------------------------
@@ -127,28 +130,15 @@ default_pas_plan = _serving_default_pas_plan
 def build_quality_policy(args, ucfg, dcfg, cfg) -> QualityPolicy:
     """The process-wide quality resolver: engine geometry + optional
     shift-score calibration profile (``--profile``, as emitted by
-    ``examples/pas_calibration.py --profile-out``)."""
-    profile = profile_ts = None
-    if getattr(args, "profile", None):
-        from repro.core.shift_score import load_profile
+    ``examples/pas_calibration.py --profile-out``).
 
-        profile, profile_ts = load_profile(args.profile)
-    return QualityPolicy.for_engine(
-        ucfg, dcfg, cfg, profile=profile, profile_ts=profile_ts
-    )
-
-
-def _check_shards_available(n_shards: int) -> None:
-    """Fail fast, with an actionable message, when the lane mesh cannot be
-    built — previously ``--cache cross --shards N`` on a short-device host
-    died deep inside mesh construction."""
-    avail = jax.device_count()
-    if n_shards > avail:
-        raise SystemExit(
-            f"--shards {n_shards} needs {n_shards} visible devices but only "
-            f"{avail} present; lower --shards or expose host devices, e.g. "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards}"
-        )
+    ``cfg`` is the :class:`~repro.serving.EngineConfig`; the ``args``
+    parameter is legacy (the profile path now rides on the config) and is
+    only consulted when ``cfg.profile`` is unset.
+    """
+    if not cfg.profile and getattr(args, "profile", None):
+        cfg = dataclasses.replace(cfg, profile=args.profile)
+    return CFG.build_policy(cfg, ucfg, dcfg)
 
 
 def make_diffusion_requests(args, ucfg, policy: QualityPolicy | None = None) -> list[GenRequest]:
@@ -186,52 +176,39 @@ def make_diffusion_requests(args, ucfg, policy: QualityPolicy | None = None) -> 
 
 
 def _init_diffusion_models(args, *, decode_images: bool = True):
-    """Config + freshly initialized U-Net/VAE params per CLI args — the
-    ONE place the served model is constructed, so the static baseline and
-    the continuous engine always serve identical weights."""
-    ucfg = get_unet_config(args.unet)
-    dcfg = DiffusionConfig(timesteps_sample=args.timesteps)
-    k1, k2 = jax.random.split(jax.random.key(args.seed))
-    params = U.init_unet(k1, ucfg)
-    vae_params = (
-        V.init_vae(k2, latent_channels=ucfg.in_channels) if decode_images else None
+    """Deprecated argparse-coupled shim.
+
+    Model construction lives on the typed config path now:
+    ``repro.serving.config.init_models(from_args(args))``.  Kept (one
+    release) so external callers of the old name keep working.
+    """
+    warnings.warn(
+        "_init_diffusion_models(args) is deprecated; build an EngineConfig "
+        "with repro.serving.config.from_args and call init_models on it",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return ucfg, dcfg, params, vae_params
+    return CFG.init_models(CFG.from_args(args, decode_images=decode_images))
 
 
 def build_continuous_engine(args, *, decode_images: bool = True):
-    """The continuous (possibly sharded, possibly cache-armed) engine per
-    CLI args — shared by the batch path and the HTTP frontend.
+    """Deprecated argparse-coupled shim over the typed construction path.
 
-    Returns ``(engine, ucfg, dcfg, cfg)``.
+    Use ``repro.serving.config``::
+
+        cfg = config.from_args(args, decode_images=...)
+        bundle = config.build_engine(cfg)
+
+    Returns ``(engine, ucfg, dcfg, cfg)`` exactly as before.
     """
-    ucfg, dcfg, params, vae_params = _init_diffusion_models(
-        args, decode_images=decode_images
+    warnings.warn(
+        "build_continuous_engine(args) is deprecated; build an EngineConfig "
+        "with repro.serving.config.from_args and call build_engine on it",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    n_up = U.n_up_steps(ucfg)
-    n_shards = getattr(args, "shards", 1)
-    _check_shards_available(n_shards)
-    cache_mode = getattr(args, "cache", "off")
-    cfg = EngineConfig(
-        n_lanes=args.batch,
-        max_steps=args.timesteps,
-        l_sketch=min(3, n_up),
-        l_refine=min(2, n_up),
-        decode_images=decode_images,
-        cache_mode=cache_mode,
-        cache_slots=getattr(args, "cache_slots", 16),
-        cache_threshold=getattr(args, "cache_threshold", 0.15),
-        cache_t_bucket=getattr(args, "cache_bucket", 125),
-        n_shards=n_shards,
-    )
-    window = getattr(args, "window", 4)
-    scheduler = (
-        CacheAwareScheduler(window=window)
-        if cache_mode != "off"
-        else PlanAwareScheduler(window=window)
-    )
-    engine = make_serving_engine(ucfg, dcfg, params, vae_params, cfg, scheduler=scheduler)
-    return engine, ucfg, dcfg, cfg
+    bundle = CFG.build_engine(CFG.from_args(args, decode_images=decode_images))
+    return bundle.engine, bundle.ucfg, bundle.dcfg, bundle.config
 
 
 def serve_diffusion(args) -> dict:
@@ -254,7 +231,13 @@ def serve_diffusion(args) -> dict:
                 "--shards requires the continuous engine (lockstep batches have "
                 "no lane axis to shard); drop --engine static or --shards"
             )
-        ucfg, dcfg, params, vae_params = _init_diffusion_models(args)
+        if getattr(args, "kernels", "xla") != "xla":
+            raise SystemExit(
+                "--kernels pallas requires the continuous engine (the lockstep "
+                "baseline is the XLA reference); drop --engine static or --kernels"
+            )
+        cfg = CFG.from_args(args)
+        ucfg, dcfg, params, vae_params = CFG.init_models(cfg)
         n_up = U.n_up_steps(ucfg)
         policy = QualityPolicy(n_up)
         quality = getattr(args, "quality", None)
@@ -266,10 +249,9 @@ def serve_diffusion(args) -> dict:
             ucfg, dcfg, params, vae_params, reqs, args.batch, plan_fn=plan_fn
         )
     else:
-        engine, ucfg, dcfg, cfg = build_continuous_engine(args)
-        policy = build_quality_policy(args, ucfg, dcfg, cfg)
-        reqs = make_diffusion_requests(args, ucfg, policy)
-        done, summary = engine.run(reqs)
+        bundle = CFG.build_engine(CFG.from_args(args))
+        reqs = make_diffusion_requests(args, bundle.ucfg, bundle.policy)
+        done, summary = bundle.engine.run(reqs)
 
     assert sorted(r.rid for r in done) == list(range(args.requests))
     return dict(
@@ -302,12 +284,13 @@ def serve_http(args) -> None:
             "no event loop to drive asynchronously); drop --engine static"
         )
     host, port = _parse_hostport(args.http)
-    engine, ucfg, dcfg, cfg = build_continuous_engine(args, decode_images=False)
-    driver = EngineDriver(engine, max_inflight=args.max_inflight)
+    cfg = CFG.from_args(args, decode_images=False)
+    bundle = CFG.build_engine(cfg)
+    driver = EngineDriver(bundle.engine, max_inflight=cfg.max_inflight)
     factory = RequestFactory(
-        ucfg, dcfg, cfg,
-        policy=build_quality_policy(args, ucfg, dcfg, cfg),
-        default_quality=getattr(args, "quality", None),
+        bundle.ucfg, bundle.dcfg, cfg,
+        policy=bundle.policy,
+        default_quality=cfg.quality,
     )
 
     async def amain() -> dict:
@@ -428,6 +411,15 @@ def main() -> None:
         help="step-level continuous batching vs fixed-size lockstep batches",
     )
     ap.add_argument("--window", type=int, default=4, help="plan-aware admission window")
+    ap.add_argument(
+        "--kernels",
+        choices=["xla", "pallas"],
+        default="xla",
+        help="kernel backend for the served hot path: xla = inline reference "
+        "ops (bit-exact with pre-backend builds), pallas = the Pallas "
+        "kernels (Uni-conv, fused GroupNorm+SiLU, flash attention; "
+        "interpret mode off-TPU). Engine-wide — requests may only echo it",
+    )
     ap.add_argument(
         "--shards", type=int, default=1,
         help="lane shards over a device mesh (continuous engine only; needs "

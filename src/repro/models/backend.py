@@ -1,0 +1,114 @@
+"""Kernel-backend dispatch for the served U-Net/VAE hot path.
+
+One :class:`KernelBackend` bundles the three compute primitives the paper's
+Sec. IV kernels replace — convolution (Uni-conv), group norm (with the
+fused SiLU epilogue), and softmax attention — so model code routes every
+hot call through exactly one object, selected **per engine** rather than
+per call:
+
+* ``resolve_backend("xla")`` — the pure-XLA reference path.  It routes to
+  the very same functions the model code used to call inline
+  (``unet.uniconv_apply`` / ``unet.group_norm`` / ``unet._mha``), so the
+  traced program — and therefore the golden latent digests — are
+  bit-identical to an engine built before this dispatch layer existed.
+* ``resolve_backend("pallas")`` — the Pallas kernels from
+  :data:`repro.kernels.KERNEL_REGISTRY` (interpret mode on CPU).  The
+  flash-attention kernel's online softmax is mathematically but not
+  bitwise equal to ``jax.nn.softmax``, so pallas engines are verified by
+  the documented-tolerance differential suite, never the bit-exact golden
+  family.
+
+Backends are resolved once at engine/micro-step construction and captured
+in the jitted closures; they are never a traced value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+#: the selectable kernel backends
+BACKENDS = ("xla", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """The three hot-path primitives, uniformly shaped across backends.
+
+    * ``conv(w, b, x, hw, ksize, stride=1)`` — K*K conv on the (L, C)
+      layout, ``x`` is [B, L, Cin];
+    * ``group_norm(x, p, groups, *, eps=1e-5, silu=False)`` — group norm
+      over ``p = {"scale", "bias"}`` with an optional fused SiLU epilogue;
+    * ``attention(q, k, v, o_proj, n_heads)`` — multi-head softmax
+      attention over already-projected [B, L, C] tensors, including the
+      output projection.
+    """
+
+    name: str
+    conv: Callable[..., jax.Array]
+    group_norm: Callable[..., jax.Array]
+    attention: Callable[..., jax.Array]
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, l, c = x.shape
+    return x.reshape(b, l, n_heads, c // n_heads).transpose(0, 2, 1, 3)
+
+
+def _make_xla() -> KernelBackend:
+    from repro.models import unet as U
+
+    def group_norm(x, p, groups, *, eps=1e-5, silu=False):
+        y = U.group_norm(x, p, groups, eps)
+        return jax.nn.silu(y) if silu else y
+
+    return KernelBackend(
+        name="xla",
+        conv=U.uniconv_apply,
+        group_norm=group_norm,
+        attention=U._mha,
+    )
+
+
+def _make_pallas() -> KernelBackend:
+    from repro.kernels import KERNEL_REGISTRY
+
+    uniconv = KERNEL_REGISTRY["uniconv"][0]
+    stream_group_norm = KERNEL_REGISTRY["stream_group_norm"][0]
+    flash_attention = KERNEL_REGISTRY["flash_attention"][0]
+
+    def conv(w, b, x, hw, ksize, stride=1):
+        return uniconv(x, w, b, hw, ksize, stride)
+
+    def group_norm(x, p, groups, *, eps=1e-5, silu=False):
+        return stream_group_norm(x, p["scale"], p["bias"], groups=groups, eps=eps, silu=silu)
+
+    def attention(q, k, v, o_proj, n_heads):
+        # the kernel applies the 1/sqrt(dh) scale internally, so q goes in
+        # unscaled (the XLA path pre-scales instead — same math)
+        bsz, lq, c = q.shape
+        out = flash_attention(
+            _split_heads(q, n_heads),
+            _split_heads(k, n_heads),
+            _split_heads(v, n_heads),
+            causal=False,
+        )
+        return out.transpose(0, 2, 1, 3).reshape(bsz, lq, c) @ o_proj
+
+    return KernelBackend(name="pallas", conv=conv, group_norm=group_norm, attention=attention)
+
+
+_CACHE: dict[str, KernelBackend] = {}
+
+
+def resolve_backend(backend: Any = None) -> KernelBackend:
+    """Name (``"xla"`` | ``"pallas"`` | None = xla) or instance -> instance."""
+    if isinstance(backend, KernelBackend):
+        return backend
+    name = backend or "xla"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; expected one of {list(BACKENDS)}")
+    if name not in _CACHE:
+        _CACHE[name] = _make_xla() if name == "xla" else _make_pallas()
+    return _CACHE[name]

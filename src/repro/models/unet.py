@@ -31,6 +31,15 @@ from repro.models.layers import _dense_init
 Params = dict[str, Any]
 
 
+def _resolve_backend(backend):
+    """Lazy import: ``repro.models.backend`` builds its XLA backend from the
+    primitives defined below, so the dispatch module cannot be imported at
+    module load without a cycle."""
+    from repro.models.backend import resolve_backend
+
+    return resolve_backend(backend)
+
+
 # ---------------------------------------------------------------------------
 # Uni-conv: address-centric convolution on the (L, C) layout  (paper Sec. IV)
 # ---------------------------------------------------------------------------
@@ -147,14 +156,15 @@ def init_res(key, cin: int, cout: int, tdim: int, groups: int, dtype) -> Params:
     return p
 
 
-def apply_res(p: Params, x: jax.Array, temb: jax.Array, hw, groups: int) -> jax.Array:
-    h = jax.nn.silu(group_norm(x, p["gn1"], groups))
-    h = uniconv_apply(p["conv1"]["w"], p["conv1"]["b"], h, hw, 3)
+def apply_res(p: Params, x: jax.Array, temb: jax.Array, hw, groups: int, backend=None) -> jax.Array:
+    bk = _resolve_backend(backend)
+    h = bk.group_norm(x, p["gn1"], groups, silu=True)
+    h = bk.conv(p["conv1"]["w"], p["conv1"]["b"], h, hw, 3)
     h = h + (jax.nn.silu(temb) @ p["t_proj"]["w"] + p["t_proj"]["b"])[:, None, :]
-    h = jax.nn.silu(group_norm(h, p["gn2"], groups))
-    h = uniconv_apply(p["conv2"]["w"], p["conv2"]["b"], h, hw, 3)
+    h = bk.group_norm(h, p["gn2"], groups, silu=True)
+    h = bk.conv(p["conv2"]["w"], p["conv2"]["b"], h, hw, 3)
     if "skip" in p:
-        x = uniconv_apply(p["skip"]["w"], p["skip"]["b"], x, hw, 1)
+        x = bk.conv(p["skip"]["w"], p["skip"]["b"], x, hw, 1)
     return x + h
 
 
@@ -198,22 +208,27 @@ def _mha(q, k, v, o_proj, n_heads: int):
     return out @ o_proj
 
 
-def apply_tf(p: Params, x: jax.Array, ctx: jax.Array, hw, n_heads: int, groups: int) -> jax.Array:
+def apply_tf(
+    p: Params, x: jax.Array, ctx: jax.Array, hw, n_heads: int, groups: int, backend=None
+) -> jax.Array:
+    bk = _resolve_backend(backend)
     res0 = x
-    h = group_norm(x, p["gn"], groups)
-    h = uniconv_apply(p["proj_in"]["w"], p["proj_in"]["b"], h, hw, 1)
+    h = bk.group_norm(x, p["gn"], groups)
+    h = bk.conv(p["proj_in"]["w"], p["proj_in"]["b"], h, hw, 1)
 
     z = layer_norm(h, p["ln1"])
-    h = h + _mha(z @ p["self_q"], z @ p["self_k"], z @ p["self_v"], p["self_o"], n_heads)
+    h = h + bk.attention(z @ p["self_q"], z @ p["self_k"], z @ p["self_v"], p["self_o"], n_heads)
     z = layer_norm(h, p["ln2"])
-    h = h + _mha(z @ p["cross_q"], ctx @ p["cross_k"], ctx @ p["cross_v"], p["cross_o"], n_heads)
+    h = h + bk.attention(
+        z @ p["cross_q"], ctx @ p["cross_k"], ctx @ p["cross_v"], p["cross_o"], n_heads
+    )
     z = layer_norm(h, p["ln3"])
     ff = z @ p["ff_in"]
     gate, val = jnp.split(ff, 2, axis=-1)
     gelu = lambda t: t * jax.nn.sigmoid(1.702 * t)  # paper's sigmoid GELU
     h = h + (gelu(gate) * val) @ p["ff_out"]
 
-    h = uniconv_apply(p["proj_out"]["w"], p["proj_out"]["b"], h, hw, 1)
+    h = bk.conv(p["proj_out"]["w"], p["proj_out"]["b"], h, hw, 1)
     return h + res0
 
 
@@ -341,6 +356,7 @@ def unet_apply(
     entry_step: int = 0,  # first up-step to execute (0 = full run)
     entry_feat: jax.Array | None = None,  # cached main-branch feature
     capture_steps: Sequence[int] = (),
+    backend=None,  # KernelBackend instance or name; None = "xla"
 ) -> tuple[jax.Array, dict[int, jax.Array]]:
     """Full or partial U-Net forward.
 
@@ -349,8 +365,13 @@ def unet_apply(
     up-steps e..end run; the main branch enters up-step ``e`` with
     ``entry_feat`` (the paper's cached sketch feature).
 
+    ``backend`` selects the kernel backend (``repro.models.backend``) every
+    conv / group-norm / attention call routes through; the default XLA
+    backend traces the identical program as the pre-dispatch inline code.
+
     Returns (eps_prediction, {captured step -> main-branch feature}).
     """
+    bk = _resolve_backend(backend)
     size = cfg.latent_size
     hw = (size, size)
     groups = cfg.groups
@@ -364,7 +385,7 @@ def unet_apply(
     n_skips_needed = n_up - entry_step  # up-steps consume skips in reverse
 
     # ---- down path (possibly truncated) -----------------------------------
-    h = uniconv_apply(params["conv_in"]["w"], params["conv_in"]["b"], x, hw, 3)
+    h = bk.conv(params["conv_in"]["w"], params["conv_in"]["b"], x, hw, 3)
     skips = [h]
     hws = [hw]
     down_plan = _down_plan(cfg)
@@ -372,15 +393,15 @@ def unet_apply(
         if len(skips) >= n_skips_needed and entry_step > 0:
             break
         if is_down:
-            h = uniconv_apply(
+            h = bk.conv(
                 entry["downsample"]["w"], entry["downsample"]["b"], h, hw, 3, stride=2
             )
             hw = (hw[0] // 2, hw[1] // 2)
         else:
-            h = apply_res(entry["res"], h, temb, hw, groups)
+            h = apply_res(entry["res"], h, temb, hw, groups, backend=bk)
             if has_attn:
                 for tfp in entry["tf"]:
-                    h = apply_tf(tfp, h, ctx, hw, cfg.n_heads, groups)
+                    h = apply_tf(tfp, h, ctx, hw, cfg.n_heads, groups, backend=bk)
         skips.append(h)
         hws.append(hw)
 
@@ -389,10 +410,10 @@ def unet_apply(
     # ---- middle ------------------------------------------------------------
     if entry_step == 0:
         m = params["mid"]
-        h = apply_res(m["res1"], h, temb, hw, groups)
+        h = apply_res(m["res1"], h, temb, hw, groups, backend=bk)
         for tfp in m["tf"]:
-            h = apply_tf(tfp, h, ctx, hw, cfg.n_heads, groups)
-        h = apply_res(m["res2"], h, temb, hw, groups)
+            h = apply_tf(tfp, h, ctx, hw, cfg.n_heads, groups, backend=bk)
+        h = apply_res(m["res2"], h, temb, hw, groups, backend=bk)
     else:
         assert entry_feat is not None, "partial run needs the cached feature"
         h = entry_feat
@@ -406,15 +427,15 @@ def unet_apply(
         skip = skips.pop()
         hw = hws.pop()
         h = jnp.concatenate([h, skip], axis=-1)
-        h = apply_res(entry["res"], h, temb, hw, groups)
+        h = apply_res(entry["res"], h, temb, hw, groups, backend=bk)
         lvl, has_attn, up_after = up_plan[step]
         if has_attn:
             for tfp in entry["tf"]:
-                h = apply_tf(tfp, h, ctx, hw, cfg.n_heads, groups)
+                h = apply_tf(tfp, h, ctx, hw, cfg.n_heads, groups, backend=bk)
         if up_after:
             h, hw = _upsample2x(h, hw)
-            h = uniconv_apply(entry["upsample"]["w"], entry["upsample"]["b"], h, hw, 3)
+            h = bk.conv(entry["upsample"]["w"], entry["upsample"]["b"], h, hw, 3)
 
-    h = jax.nn.silu(group_norm(h, params["gn_out"], groups))
-    eps = uniconv_apply(params["conv_out"]["w"], params["conv_out"]["b"], h, hw, 3)
+    h = bk.group_norm(h, params["gn_out"], groups, silu=True)
+    eps = bk.conv(params["conv_out"]["w"], params["conv_out"]["b"], h, hw, 3)
     return eps, captured

@@ -63,14 +63,22 @@ def vae_encode(p: Params, img: jax.Array, hw) -> tuple[jax.Array, jax.Array]:
     return mu, logvar
 
 
-def vae_decode(p: Params, z: jax.Array, hw) -> jax.Array:
-    """z: [B, (H/4)*(W/4), Cz] -> image [B, H*W, C]."""
+def vae_decode(p: Params, z: jax.Array, hw, backend=None) -> jax.Array:
+    """z: [B, (H/4)*(W/4), Cz] -> image [B, H*W, C].
+
+    ``backend`` routes the convs/group norm through the same
+    :class:`~repro.models.backend.KernelBackend` as the U-Net (None = XLA,
+    bit-identical to the pre-dispatch inline path).
+    """
+    from repro.models.backend import resolve_backend
+
+    bk = resolve_backend(backend)
     cur = hw
-    h = uniconv_apply(p["dec_in"]["w"], p["dec_in"]["b"], z, cur, 1)
-    h = jax.nn.silu(uniconv_apply(p["dec"][0]["w"], p["dec"][0]["b"], h, cur, 3))
+    h = bk.conv(p["dec_in"]["w"], p["dec_in"]["b"], z, cur, 1)
+    h = jax.nn.silu(bk.conv(p["dec"][0]["w"], p["dec"][0]["b"], h, cur, 3))
     h, cur = _up2x(h, cur)
-    h = jax.nn.silu(uniconv_apply(p["dec"][1]["w"], p["dec"][1]["b"], h, cur, 3))
+    h = jax.nn.silu(bk.conv(p["dec"][1]["w"], p["dec"][1]["b"], h, cur, 3))
     h, cur = _up2x(h, cur)
-    h = jax.nn.silu(uniconv_apply(p["dec"][2]["w"], p["dec"][2]["b"], h, cur, 3))
-    h = group_norm(h, p["dec_gn"], 8)
-    return uniconv_apply(p["dec_out"]["w"], p["dec_out"]["b"], h, cur, 3)
+    h = jax.nn.silu(bk.conv(p["dec"][2]["w"], p["dec"][2]["b"], h, cur, 3))
+    h = bk.group_norm(h, p["dec_gn"], 8)
+    return bk.conv(p["dec_out"]["w"], p["dec_out"]["b"], h, cur, 3)

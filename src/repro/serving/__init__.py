@@ -10,6 +10,10 @@
   warm-shard routing)
 * ``engine``    — the continuous-batching event loop (single-device +
   mesh-sharded) + static baseline
+* ``config``    — typed construction: argparse -> ``EngineConfig`` ->
+  ``EngineBundle`` (models + engine + quality policy), one audited path
+  shared by the CLI, benchmarks and tests; also selects the kernel
+  ``backend`` ("xla" | "pallas") for the jitted hot path
 * ``driver``    — dedicated engine thread: thread-safe bounded submission,
   per-request event streams, cancellation, graceful drain, variation groups
 * ``schema``    — the v2 generate-request schema: tagged task union
@@ -35,6 +39,7 @@ from repro.serving.cache import (
 # runnable as ``python -m repro.serving.client`` and importing it from the
 # package __init__ would make runpy warn about double execution.  Import
 # it explicitly: ``from repro.serving.client import FrontendClient``.
+from repro.serving.config import EngineBundle, build_engine
 from repro.serving.driver import EngineDriver, SubmitRejected, latent_digest
 from repro.serving.engine import (
     CompletedRequest,
@@ -74,6 +79,7 @@ __all__ = [
     "CacheState",
     "CompletedRequest",
     "DiffusionEngine",
+    "EngineBundle",
     "EngineConfig",
     "EngineDriver",
     "FIFOScheduler",
@@ -95,6 +101,7 @@ __all__ = [
     "SlotRing",
     "StaticServer",
     "SubmitRejected",
+    "build_engine",
     "default_pas_plan",
     "is_v1",
     "latent_digest",

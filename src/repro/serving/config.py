@@ -1,0 +1,182 @@
+"""Typed engine construction: one audited path from config to serving stack.
+
+:class:`repro.serving.EngineConfig` is the single construction artifact for
+a served engine — lane/cache geometry, kernel ``backend``, model ref, seed,
+quality default, scheduler window and HTTP admission bound all live on the
+one frozen dataclass.  This module owns the adapters around it:
+
+* :func:`from_args` — argparse namespace (the ``repro.launch.serve`` /
+  benchmark CLI surface) -> ``EngineConfig``;
+* :func:`to_dict` / :func:`from_dict` — loss-free (de)serialization, e.g.
+  for logging the exact construction inputs next to benchmark results;
+* :func:`init_models` — config -> (ucfg, dcfg, params, vae_params), the ONE
+  place served weights are constructed so every consumer (CLI batch path,
+  HTTP frontend, benchmarks, differential tests) serves identical weights;
+* :func:`build_engine` — config -> :class:`EngineBundle` (engine + models +
+  quality policy + the config itself), the audited construction path.
+
+The legacy ``build_continuous_engine(args)`` / ``_init_diffusion_models(args)``
+entry points in ``repro.launch.serve`` now delegate here behind a
+``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.common.types import DiffusionConfig, UNetConfig
+from repro.configs import get_unet_config
+from repro.models import unet as U
+from repro.models import vae as V
+from repro.serving.engine import EngineConfig, make_serving_engine
+from repro.serving.policy import QualityPolicy
+from repro.serving.scheduler import (
+    CacheAwareScheduler,
+    FIFOScheduler,
+    PlanAwareScheduler,
+)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineBundle:
+    """Everything :func:`build_engine` constructs, kept together so callers
+    never re-derive configs or re-init weights on a divergent path."""
+
+    engine: Any  # DiffusionEngine | ShardedDiffusionEngine
+    ucfg: UNetConfig
+    dcfg: DiffusionConfig
+    config: EngineConfig
+    params: Params
+    vae_params: Params | None
+    policy: QualityPolicy
+
+
+def from_args(args: Any, *, decode_images: bool = True) -> EngineConfig:
+    """Map the CLI surface (``repro.launch.serve`` flags, benchmark
+    namespaces) onto one :class:`EngineConfig`.
+
+    Missing attributes fall back to the engine defaults, so benchmark
+    namespaces carrying only a subset of the serve flags still resolve.
+    """
+    unet = getattr(args, "unet", "sd_toy")
+    n_up = U.n_up_steps(get_unet_config(unet))
+    return EngineConfig(
+        n_lanes=args.batch,
+        max_steps=args.timesteps,
+        l_sketch=min(3, n_up),
+        l_refine=min(2, n_up),
+        decode_images=decode_images,
+        cache_mode=getattr(args, "cache", "off"),
+        cache_slots=getattr(args, "cache_slots", 16),
+        cache_threshold=getattr(args, "cache_threshold", 0.15),
+        cache_t_bucket=getattr(args, "cache_bucket", 125),
+        n_shards=getattr(args, "shards", 1),
+        backend=getattr(args, "kernels", None) or "xla",
+        unet=unet,
+        seed=getattr(args, "seed", 0),
+        quality=getattr(args, "quality", None),
+        profile=getattr(args, "profile", None),
+        window=getattr(args, "window", 4),
+        max_inflight=getattr(args, "max_inflight", 32),
+    )
+
+
+def to_dict(config: EngineConfig) -> dict:
+    """Loss-free dict form (JSON-safe for the toy configs)."""
+    return dataclasses.asdict(config)
+
+
+def from_dict(d: dict) -> EngineConfig:
+    """Inverse of :func:`to_dict`; unknown keys are rejected by the
+    dataclass constructor (typos fail loudly, not silently)."""
+    return EngineConfig(**d)
+
+
+def check_shards_available(n_shards: int) -> None:
+    """Fail fast, with an actionable message, when the lane mesh cannot be
+    built — ``--shards N`` on a short-device host otherwise dies deep
+    inside mesh construction."""
+    avail = jax.device_count()
+    if n_shards > avail:
+        raise SystemExit(
+            f"--shards {n_shards} needs {n_shards} visible devices but only "
+            f"{avail} present; lower --shards or expose host devices, e.g. "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards}"
+        )
+
+
+def init_models(
+    config: EngineConfig,
+) -> tuple[UNetConfig, DiffusionConfig, Params, Params | None]:
+    """Config + freshly initialized U-Net/VAE params — the ONE place the
+    served model is constructed, so the static baseline, the continuous
+    engine, benchmarks and the differential tests all serve identical
+    weights for a given (unet, seed)."""
+    ucfg = get_unet_config(config.unet)
+    dcfg = DiffusionConfig(timesteps_sample=config.max_steps)
+    k1, k2 = jax.random.split(jax.random.key(config.seed))
+    params = U.init_unet(k1, ucfg)
+    vae_params = (
+        V.init_vae(k2, latent_channels=ucfg.in_channels)
+        if config.decode_images
+        else None
+    )
+    return ucfg, dcfg, params, vae_params
+
+
+def build_policy(
+    config: EngineConfig, ucfg: UNetConfig, dcfg: DiffusionConfig
+) -> QualityPolicy:
+    """The process-wide quality resolver for an engine built from
+    ``config``: engine geometry + the optional shift-score calibration
+    profile named by ``config.profile``."""
+    profile = profile_ts = None
+    if config.profile:
+        from repro.core.shift_score import load_profile
+
+        profile, profile_ts = load_profile(config.profile)
+    return QualityPolicy.for_engine(
+        ucfg, dcfg, config, profile=profile, profile_ts=profile_ts
+    )
+
+
+def default_scheduler(config: EngineConfig) -> FIFOScheduler:
+    """Cache-armed engines pack warm-shard-aware; otherwise plan-aware."""
+    if config.cache_mode != "off":
+        return CacheAwareScheduler(window=config.window)
+    return PlanAwareScheduler(window=config.window)
+
+
+def build_engine(
+    config: EngineConfig,
+    *,
+    scheduler: FIFOScheduler | None = None,
+    models: tuple[UNetConfig, DiffusionConfig, Params, Params | None] | None = None,
+) -> EngineBundle:
+    """The audited construction path: config -> ready-to-serve bundle.
+
+    ``models`` (as returned by :func:`init_models`) lets tests and
+    benchmarks inject fixed weights; by default the bundle inits from
+    ``(config.unet, config.seed)``.
+    """
+    check_shards_available(config.n_shards)
+    ucfg, dcfg, params, vae_params = (
+        init_models(config) if models is None else models
+    )
+    engine = make_serving_engine(
+        ucfg, dcfg, params, vae_params, config,
+        scheduler=scheduler if scheduler is not None else default_scheduler(config),
+    )
+    return EngineBundle(
+        engine=engine,
+        ucfg=ucfg,
+        dcfg=dcfg,
+        config=config,
+        params=params,
+        vae_params=vae_params,
+        policy=build_policy(config, ucfg, dcfg),
+    )

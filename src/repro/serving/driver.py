@@ -236,6 +236,7 @@ class EngineDriver:
                         "event": "queued", "rid": g.gid,
                         "variants": len(g.members),
                         "quality": ev.get("quality"),
+                        "kernels": ev.get("kernels"),
                         "pending": ev.get("pending"), "active": ev.get("active"),
                     })
             elif kind == "step":
@@ -355,6 +356,7 @@ class EngineDriver:
             eng.metrics.summary(),
             mode=eng._mode_name,
             lanes=eng.config.n_lanes,
+            kernels=getattr(eng.config, "backend", "xla"),
             accepted=self.n_accepted,
             completed=self.n_completed,
             cancelled=self.n_cancelled,
@@ -387,6 +389,7 @@ class EngineDriver:
             self._emit(rid, {
                 "event": "queued", "rid": rid,
                 "quality": t.req.quality_tier,
+                "kernels": getattr(self.engine.config, "backend", "xla"),
                 "pending": self.engine.n_pending, "active": self.engine.n_active,
             })
         elif kind == "cancel":

@@ -159,6 +159,29 @@ class EngineConfig:
     #: engine (``ShardedDiffusionEngine``) with ``n_lanes / N`` lanes and
     #: ``cache_slots`` feature slots per shard
     n_shards: int = 1
+    #: kernel backend for the jitted hot path (micro-steps + VAE decode):
+    #: "xla" routes through the inline reference ops (bit-identical traced
+    #: program to pre-dispatch engines), "pallas" through
+    #: ``repro.kernels.KERNEL_REGISTRY`` (interpret mode off-TPU).  Resolved
+    #: once at engine build — never per request.
+    backend: str = "xla"
+    # -- construction-level fields --------------------------------------------
+    # Read by `repro.serving.config` when it builds the full serving stack
+    # (model init, policy, scheduler, HTTP admission); the engine itself only
+    # consumes the lane/cache/backend geometry above.
+    #: model/config ref resolved via ``repro.models.unet.get_unet_config``
+    unet: str = "sd_toy"
+    #: parameter-init PRNG seed
+    seed: int = 0
+    #: default quality tier for requests that don't carry one (None = the
+    #: policy's own default)
+    quality: str | None = None
+    #: shift-score profile path for the cache policy (None = built-in)
+    profile: str | None = None
+    #: ``PlanAwareScheduler`` alignment window
+    window: int = 4
+    #: HTTP admission bound (driver-level, not an engine concern)
+    max_inflight: int = 32
 
     def __post_init__(self):
         if self.cache_mode not in ("off", "intra", "cross"):
@@ -169,6 +192,8 @@ class EngineConfig:
             raise ValueError(
                 f"n_lanes={self.n_lanes} must divide evenly over n_shards={self.n_shards}"
             )
+        if self.backend not in ("xla", "pallas"):
+            raise ValueError(f"backend must be xla|pallas, got {self.backend!r}")
 
 
 class DiffusionEngine:
@@ -199,7 +224,9 @@ class DiffusionEngine:
         self._decoder = None
         if vae_params is not None and config.decode_images:
             lhw = (ucfg.latent_size, ucfg.latent_size)
-            self._decoder = jax.jit(lambda z: V.vae_decode(vae_params, z, lhw))
+            self._decoder = jax.jit(
+                lambda z: V.vae_decode(vae_params, z, lhw, backend=config.backend)
+            )
 
         # host mirrors (device round-trips per micro-step stay O(n_lanes))
         n = config.n_lanes
@@ -225,7 +252,8 @@ class DiffusionEngine:
             ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf
         )
         self._micro = LN.make_micro_step(
-            ucfg, self.dcfg, params, self.e_sk, self.e_rf, cached=self.cache is not None
+            ucfg, self.dcfg, params, self.e_sk, self.e_rf,
+            cached=self.cache is not None, backend=config.backend,
         )
         self._admit = jax.jit(LN.admit, donate_argnums=(0,))
 
@@ -450,6 +478,7 @@ class DiffusionEngine:
         active = self._active_lanes()
         if not active:
             return []
+        t_step0 = time.perf_counter()
 
         planned = np.array(
             [self._lane_req[i]._lane_plan.branches[self._lane_step[i]] for i in active],
@@ -566,6 +595,7 @@ class DiffusionEngine:
             self._release_lane(lane)
             self._lane_req[lane] = None
             self.metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
+        self.metrics.record_step_time(self.config.backend, time.perf_counter() - t_step0)
         return done
 
     def run(
@@ -605,6 +635,7 @@ class DiffusionEngine:
             self.metrics.summary(),
             mode=self._mode_name,
             lanes=self.config.n_lanes,
+            kernels=self.config.backend,
             **self._summary_extra(),
         )
         if self.cache is not None:
@@ -689,7 +720,7 @@ class ShardedDiffusionEngine(DiffusionEngine):
         )
         self._micro = LN.make_sharded_micro_step(
             ucfg, self.dcfg, self.e_sk, self.e_rf, self.mesh,
-            cached=self.cache is not None,
+            cached=self.cache is not None, backend=config.backend,
         )
         self._admit = LN.make_sharded_admit(self.mesh)
         self._release = LN.make_sharded_release(self.mesh)
@@ -800,6 +831,7 @@ class ShardedDiffusionEngine(DiffusionEngine):
         active = self._active_lanes()
         if not active:
             return []
+        t_step0 = time.perf_counter()
 
         planned = np.array(
             [self._lane_req[i]._lane_plan.branches[self._lane_step[i]] for i in active],
@@ -931,6 +963,7 @@ class ShardedDiffusionEngine(DiffusionEngine):
             self._release_lane(lane)
             self._lane_req[lane] = None
             self.metrics.record_completion(done[-1].latency_s, done[-1].queue_wait_s)
+        self.metrics.record_step_time(self.config.backend, time.perf_counter() - t_step0)
         return done
 
 

@@ -13,7 +13,8 @@ Endpoints (HTTP/1.1, ``Connection: close``):
 ``POST /generate``
     v2 JSON body: ``{"task": "txt2img"|"img2img"|"inpaint"|"variations",
     "prompt": str, "timesteps": int, "quality": str|float, "plan": {...},
-    "pas": bool, "seed": int, "allow_cache": bool, "stream": bool}`` plus
+    "pas": bool, "seed": int, "allow_cache": bool, "stream": bool,
+    "kernels": "xla"|"pallas"}`` plus
     the task's own fields — ``img2img``: ``init`` + ``strength``;
     ``inpaint``: ``init`` + ``mask``; ``variations``: ``variants`` (see
     ``repro.serving.schema`` / ``docs/api.md``).  A payload *without* a
@@ -45,8 +46,10 @@ Endpoints (HTTP/1.1, ``Connection: close``):
     Full serving-metrics summary, taken on the driver thread — including
     per-branch-class executed-step counts (``full_steps`` /
     ``sketch_steps`` / ``refine_steps``), cache demotions + hit rate, and
-    the per-quality-tier request mix (``quality_mix``), so mixed-quality
-    streams are observable without the bench harness.
+    the per-quality-tier request mix (``quality_mix``), the active kernel
+    backend (``kernels``) and per-backend micro-step timing
+    (``step_time_by_backend``), so mixed-quality streams are observable
+    without the bench harness.
 ``POST /shutdown``
     Graceful drain: ``202`` immediately, then stop accepting, run every
     in-flight request to a terminal event, flush the open streams, and
@@ -108,6 +111,8 @@ class RequestFactory:
         self.max_steps = engine_config.max_steps
         self.l_sketch = engine_config.l_sketch
         self.l_refine = engine_config.l_refine
+        #: the engine's kernel backend; payloads may only *assert* it
+        self.backend = getattr(engine_config, "backend", "xla")
         self.n_up = U.n_up_steps(ucfg)
         self.policy = (
             policy
@@ -188,6 +193,14 @@ class RequestFactory:
         from repro.serving.engine import GenRequest
 
         spec = parse_request(payload, max_steps=self.max_steps)
+        # the kernel backend is fixed at engine construction; the field is
+        # accepted only as an assertion of what this server is running
+        if spec.kernels is not None and spec.kernels != self.backend:
+            raise SchemaError(
+                "forbidden", "kernels",
+                f"engine is serving kernels={self.backend!r}; per-request "
+                "backend switching is not supported",
+            )
         L = self.ucfg.latent_size**2
         # the policy resolves over the request's ACTUAL schedule: for a
         # strength-truncated img2img that is the tail of the base schedule,

@@ -215,6 +215,7 @@ def make_micro_step(
     e_rf: int,
     *,
     cached: bool = False,
+    backend=None,
 ):
     """Build the jitted continuous-batching micro-step.
 
@@ -254,7 +255,14 @@ def make_micro_step(
     metadata, so the engine mirrors it host-side and the device stays on
     the async-dispatch fast path.  The input state is donated — callers
     must drop their reference.
+
+    ``backend`` selects the kernel backend (``repro.models.backend``) for
+    every U-Net invocation; it is resolved once here and captured in the
+    jitted closure — never a traced value.
     """
+    from repro.models.backend import resolve_backend
+
+    bk = resolve_backend(backend)
     sched = D.make_schedule(dcfg)
     guidance = dcfg.guidance_scale
     use_pndm = dcfg.scheduler == "pndm"
@@ -274,21 +282,22 @@ def make_micro_step(
 
         def full_branch(_):
             eps, cap = SM.cfg_unet_step(
-                ucfg, params, guidance, state.x, t, ctx2, capture=(e_sk, e_rf)
+                ucfg, params, guidance, state.x, t, ctx2, capture=(e_sk, e_rf),
+                backend=bk,
             )
             return eps, cap[e_sk], cap[e_rf]
 
         def sketch_branch(_):
             eps, _ = SM.cfg_unet_step(
                 ucfg, params, guidance, state.x, t, ctx2,
-                entry_step=e_sk, entry_feat=entry_sk,
+                entry_step=e_sk, entry_feat=entry_sk, backend=bk,
             )
             return eps, entry_sk, entry_rf
 
         def refine_branch(_):
             eps, _ = SM.cfg_unet_step(
                 ucfg, params, guidance, state.x, t, ctx2,
-                entry_step=e_rf, entry_feat=entry_rf,
+                entry_step=e_rf, entry_feat=entry_rf, backend=bk,
             )
             # a REFINE step never becomes the lane's feature source of
             # record: a SKETCH->REFINE demotion consumes the slot for THIS
@@ -535,6 +544,7 @@ def make_sharded_micro_step(
     mesh,
     *,
     cached: bool = False,
+    backend=None,
 ):
     """Build the jitted mesh-sharded micro-step (one GSPMD program).
 
@@ -556,10 +566,16 @@ def make_sharded_micro_step(
 
     ``params`` are passed explicitly (replicated spec) rather than closed
     over so the shard_map body stays closure-free over device arrays.
+
+    ``backend`` selects the kernel backend for every U-Net invocation,
+    resolved once at build time exactly as in :func:`make_micro_step`.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.models.backend import resolve_backend
+
+    bk = resolve_backend(backend)
     sched = D.make_schedule(dcfg)
     guidance = dcfg.guidance_scale
     use_pndm = dcfg.scheduler == "pndm"
@@ -577,21 +593,22 @@ def make_sharded_micro_step(
 
         def full_branch(_):
             eps, cap = SM.cfg_unet_step(
-                ucfg, params, guidance, state.x, t, ctx2, capture=(e_sk, e_rf)
+                ucfg, params, guidance, state.x, t, ctx2, capture=(e_sk, e_rf),
+                backend=bk,
             )
             return eps, unpair(cap[e_sk]), unpair(cap[e_rf])
 
         def sketch_branch(_):
             eps, _ = SM.cfg_unet_step(
                 ucfg, params, guidance, state.x, t, ctx2,
-                entry_step=e_sk, entry_feat=pair2(entry_sk),
+                entry_step=e_sk, entry_feat=pair2(entry_sk), backend=bk,
             )
             return eps, entry_sk, entry_rf
 
         def refine_branch(_):
             eps, _ = SM.cfg_unet_step(
                 ucfg, params, guidance, state.x, t, ctx2,
-                entry_step=e_rf, entry_feat=pair2(entry_rf),
+                entry_step=e_rf, entry_feat=pair2(entry_rf), backend=bk,
             )
             # as in the single-device micro-step: a (possibly demoted)
             # REFINE step consumes the entry features for this step only —

@@ -36,6 +36,9 @@ class ServingMetrics:
     demoted_refine_steps: int = 0
     #: submitted requests per resolved quality tier ("full"/"pas" = legacy)
     quality_mix: dict[str, int] = dataclasses.field(default_factory=dict)
+    #: host wall seconds spent in ``engine.step`` per kernel backend
+    #: (dispatch + any retirement sync) — {backend: [count, total_s]}
+    step_time_by_backend: dict[str, list] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
 
     def record_step(
@@ -66,6 +69,12 @@ class ServingMetrics:
     def record_submission(self, tier: str) -> None:
         """Count one submitted request under its resolved quality tier."""
         self.quality_mix[tier] = self.quality_mix.get(tier, 0) + 1
+
+    def record_step_time(self, backend: str, seconds: float) -> None:
+        """Accumulate one micro-step's host wall time under its backend."""
+        acc = self.step_time_by_backend.setdefault(backend, [0, 0.0])
+        acc[0] += 1
+        acc[1] += seconds
 
     def record_completion(self, latency_s: float, queue_wait_s: float) -> None:
         self.latencies_s.append(latency_s)
@@ -101,6 +110,10 @@ class ServingMetrics:
                 self.demoted_steps / max(self.full_steps + self.demoted_steps, 1), 3
             ),
             "quality_mix": dict(sorted(self.quality_mix.items())),
+            "step_time_by_backend": {
+                k: {"steps": c, "mean_s": round(t / max(c, 1), 6)}
+                for k, (c, t) in sorted(self.step_time_by_backend.items())
+            },
             **self._shard_summary(),
         }
 

@@ -20,7 +20,10 @@ Task fields (see ``docs/api.md`` for the full protocol):
 * every task: ``prompt`` (str), ``seed`` (int), ``timesteps`` (int, the
   *base* schedule length), ``quality`` (tier name or number in [0, 1]),
   ``plan`` (explicit PASPlan fields), ``pas`` (legacy stock-plan switch),
-  ``allow_cache`` (bool), ``stream`` (bool);
+  ``allow_cache`` (bool), ``stream`` (bool), ``kernels`` (``"xla"`` |
+  ``"pallas"``, optional) — the kernel backend is an *engine* property, so
+  the field is pure assertion: a value disagreeing with the server's
+  backend is a typed 400 ``forbidden`` (the frontend enforces this);
 * ``img2img``: ``init`` (``{"seed": int}`` synthetic-image handle,
   required) and ``strength`` in (0, 1] (default 0.75) — the executed
   schedule is the last ``round(strength * timesteps)`` steps of the base
@@ -44,7 +47,11 @@ TASKS = ("txt2img", "img2img", "inpaint", "variations")
 V2_FIELDS = frozenset({
     "task", "prompt", "seed", "timesteps", "quality", "plan", "pas",
     "allow_cache", "stream", "init", "strength", "mask", "variants",
+    "kernels",
 })
+
+#: values the optional ``kernels`` assertion field may take
+KERNELS_VALUES = ("xla", "pallas")
 
 #: explicit-plan fields (``l_*`` default to the engine's cache geometry)
 PLAN_FIELDS = ("t_sketch", "t_complete", "t_sparse", "l_sketch", "l_refine")
@@ -102,6 +109,9 @@ class RequestSpec:
     mask_spec: dict | None
     variants: int
     v1: bool
+    #: asserted kernel backend (None = no assertion); the frontend rejects
+    #: specs whose assertion disagrees with the engine's backend
+    kernels: str | None = None
 
 
 def is_v1(payload: Any) -> bool:
@@ -257,6 +267,12 @@ def parse_request(payload: Any, *, max_steps: int) -> RequestSpec:
     pas = _as_bool(payload, "pas", False)
     allow_cache = _as_bool(payload, "allow_cache", True)
     stream = _as_bool(payload, "stream", True)
+    kernels = payload.get("kernels")
+    if kernels is not None and kernels not in KERNELS_VALUES:
+        raise SchemaError(
+            "invalid", "kernels",
+            f"must be one of {list(KERNELS_VALUES)}, got {kernels!r}",
+        )
 
     strength: float | None = None
     init_seed: int | None = None
@@ -294,4 +310,5 @@ def parse_request(payload: Any, *, max_steps: int) -> RequestSpec:
         mask_spec=mask_spec,
         variants=variants,
         v1=v1,
+        kernels=kernels,
     )

@@ -37,6 +37,21 @@ def test_flash_matches_ref(b, h, hkv, s, dh, causal, window, softcap):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("sq,skv", [(256, 8), (64, 8), (16, 256)])
+def test_flash_cross_attention_lengths(sq, skv):
+    """Q and KV sequence lengths may differ (cross-attention over a short
+    prompt-embedding context, as the served U-Net runs it)."""
+    key = jax.random.key(sq + skv)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (2, 2, sq, 16), jnp.float32)
+    k = jax.random.normal(k2, (2, 2, skv, 16), jnp.float32)
+    v = jax.random.normal(k3, (2, 2, skv, 16), jnp.float32)
+    got = flash_attention(q, k, v, causal=False)
+    want = flash_attention_ref(q, k, v, causal=False)
+    assert got.shape == (2, 2, sq, 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
 def test_flash_block_shape_invariance():
     q, k, v = _qkv(jax.random.key(9), 1, 2, 2, 256, 64)
     a = flash_attention(q, k, v, block_q=64, block_k=64)

@@ -1,11 +1,11 @@
-"""Stream-norm Pallas kernel (one-pass layernorm/rmsnorm, paper Eq. 4)."""
+"""Stream-norm Pallas kernels (one-pass layernorm/rmsnorm/groupnorm, Eq. 4)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.stream_norm.ops import stream_norm
-from repro.kernels.stream_norm.ref import stream_norm_ref
+from repro.kernels.stream_norm.ops import stream_group_norm, stream_norm
+from repro.kernels.stream_norm.ref import stream_group_norm_ref, stream_norm_ref
 
 CASES = [
     (64, 128), (256, 384), (1024, 64), (8, 8), (100, 33),  # odd shapes too
@@ -49,3 +49,44 @@ def test_stream_norm_block_m_invariance():
     a = stream_norm(x, s, None, mode="rmsnorm", block_m=64)
     b = stream_norm(x, s, None, mode="rmsnorm", block_m=512)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# -- group norm (+ fused SiLU epilogue) --------------------------------------
+
+GN_CASES = [
+    # (b, l, c, groups) — includes the served sd_toy shapes (groups=8)
+    (2, 256, 32, 8), (2, 64, 64, 8), (1, 16, 128, 8), (3, 100, 24, 4),
+]
+
+
+@pytest.mark.parametrize("b,l,c,groups", GN_CASES)
+@pytest.mark.parametrize("silu", [False, True])
+def test_stream_group_norm_matches_ref(b, l, c, groups, silu):
+    x = jax.random.normal(jax.random.key(b * l + c), (b, l, c), jnp.float32) * 2 + 0.5
+    scale = jax.random.normal(jax.random.key(6), (c,)) * 0.1 + 1
+    bias = jax.random.normal(jax.random.key(7), (c,)) * 0.1
+    got = stream_group_norm(x, scale, bias, groups=groups, silu=silu)
+    want = stream_group_norm_ref(x, scale, bias, groups=groups, silu=silu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_stream_group_norm_matches_model_group_norm():
+    """The kernel normalizes over the same (L, per-group-C) statistics as
+    the model's reference ``group_norm`` — per (batch, group), not per row."""
+    from repro.models.unet import group_norm, init_gn
+
+    x = jax.random.normal(jax.random.key(8), (2, 64, 32), jnp.float32)
+    p = init_gn(32)
+    got = stream_group_norm(x, p["scale"], p["bias"], groups=8)
+    want = group_norm(x, p, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_stream_group_norm_fused_silu_equals_unfused():
+    """f32 in, f32 out: the fused epilogue equals silu-after (the fusion
+    only removes the HBM round-trip, not a rounding step)."""
+    x = jax.random.normal(jax.random.key(9), (2, 64, 32), jnp.float32)
+    s, b = jnp.ones((32,)), jnp.zeros((32,))
+    fused = stream_group_norm(x, s, b, groups=8, silu=True)
+    after = jax.nn.silu(stream_group_norm(x, s, b, groups=8, silu=False))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(after), atol=1e-7)

@@ -1,0 +1,114 @@
+"""The typed EngineConfig construction path (repro.serving.config).
+
+Pins the api contract of this PR's redesign: one audited path from an
+argparse namespace (or a plain dict) to a served engine, the kernel
+``backend`` riding on the config, and the legacy argparse-coupled entry
+points surviving as DeprecationWarning shims with identical return shapes.
+"""
+import argparse
+import warnings
+
+import pytest
+
+from repro.serving import EngineBundle, EngineConfig, build_engine
+from repro.serving import config as CFG
+from repro.serving.schema import SchemaError, parse_request, upgrade_v1
+
+
+def _ns(**kw) -> argparse.Namespace:
+    base = dict(batch=2, timesteps=4, unet="sd_toy", seed=0)
+    base.update(kw)
+    return argparse.Namespace(**base)
+
+
+def test_from_args_defaults_and_backend():
+    cfg = CFG.from_args(_ns(), decode_images=False)
+    assert cfg.backend == "xla"  # default backend
+    assert (cfg.n_lanes, cfg.max_steps) == (2, 4)
+    assert cfg.unet == "sd_toy" and cfg.seed == 0
+    cfg = CFG.from_args(_ns(kernels="pallas", quality="draft", max_inflight=7))
+    assert cfg.backend == "pallas"
+    assert cfg.quality == "draft" and cfg.max_inflight == 7
+
+
+def test_to_dict_from_dict_roundtrip():
+    cfg = CFG.from_args(_ns(kernels="pallas", cache="intra"), decode_images=False)
+    assert CFG.from_dict(CFG.to_dict(cfg)) == cfg
+
+
+def test_from_dict_rejects_unknown_keys():
+    with pytest.raises(TypeError):
+        CFG.from_dict({"n_lanes": 2, "kernel_backend": "pallas"})
+
+
+def test_engine_config_validates_backend():
+    with pytest.raises(ValueError, match="backend"):
+        EngineConfig(backend="cuda")
+
+
+def test_build_engine_bundle():
+    bundle = CFG.build_engine(CFG.from_args(_ns(), decode_images=False))
+    assert isinstance(bundle, EngineBundle)
+    assert bundle.engine.config is bundle.config
+    assert bundle.vae_params is None  # decode_images=False
+    assert bundle.policy.resolve(4, quality="exact").plan is None
+    # the package-level re-export is the same callable
+    assert build_engine is CFG.build_engine
+
+
+def test_build_engine_injected_models_share_weights():
+    cfg = CFG.from_args(_ns(), decode_images=False)
+    models = CFG.init_models(cfg)
+    bundle = CFG.build_engine(cfg, models=models)
+    assert bundle.params is models[2]
+
+
+def test_legacy_shims_warn_and_match():
+    from repro.launch.serve import _init_diffusion_models, build_continuous_engine
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        engine, ucfg, dcfg, cfg = build_continuous_engine(_ns(), decode_images=False)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert cfg == CFG.from_args(_ns(), decode_images=False)
+    assert engine.config is cfg
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ucfg2, dcfg2, params, vae = _init_diffusion_models(_ns(), decode_images=False)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert (ucfg2, dcfg2) == (ucfg, dcfg) and vae is None
+
+
+# -- the v2 "kernels" assertion field ----------------------------------------
+
+
+def test_schema_kernels_field_accepted():
+    spec = parse_request({"task": "txt2img", "kernels": "pallas"}, max_steps=8)
+    assert spec.kernels == "pallas"
+    spec = parse_request({"task": "txt2img"}, max_steps=8)
+    assert spec.kernels is None
+
+
+def test_schema_kernels_field_invalid_value():
+    with pytest.raises(SchemaError) as ei:
+        parse_request({"task": "txt2img", "kernels": "cuda"}, max_steps=8)
+    assert ei.value.code == "invalid" and ei.value.field == "kernels"
+
+
+def test_v1_shim_drops_kernels():
+    # v1 payloads predate the field; the upgrade keep-list must not carry it
+    assert "kernels" not in upgrade_v1({"prompt": "x", "kernels": "pallas"})
+
+
+def test_frontend_rejects_backend_mismatch():
+    from repro.serving import RequestFactory
+
+    bundle = CFG.build_engine(CFG.from_args(_ns(), decode_images=False))
+    fac = RequestFactory(bundle.ucfg, bundle.dcfg, bundle.config, policy=bundle.policy)
+    with pytest.raises(SchemaError) as ei:
+        fac.build({"task": "txt2img", "kernels": "pallas"})
+    assert ei.value.code == "forbidden" and ei.value.field == "kernels"
+    # a matching assertion passes through untouched
+    reqs, gid, spec = fac.build({"task": "txt2img", "kernels": "xla"})
+    assert gid is None and spec.kernels == "xla"

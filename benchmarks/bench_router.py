@@ -1,0 +1,303 @@
+"""Replica-router benchmark: goodput scaling, kill-recovery, rolling drain.
+
+Three phases against real server processes on loopback (the router and
+every replica are separate OS processes, exactly the deployment shape of
+``repro.launch.router``):
+
+1. **single** — one replica (``repro.launch.serve --http``) driven with an
+   open-loop Poisson mixed-task stream at a rate past its capacity: the
+   single-process goodput floor.  The arrival rate is auto-calibrated from
+   a closed-loop warmup so the phase saturates on fast and slow machines
+   alike.
+2. **router** — ``--replicas N`` (default 2) behind the replica router,
+   same workload, same rate scaling.  The headline gate is
+   ``router_goodput_scaling`` = router goodput / single goodput: with N
+   replicas on a multi-core host this should approach N (the paper's
+   throughput-per-accelerator scaling argument applied to process
+   replicas).  NOTE: on a single-core host the replicas timeshare one CPU
+   and the scaling collapses to ~1.0 — the gate is meaningful on the
+   multi-core CI runners the baseline was set on.
+3. **kill-recovery** — the same router fleet under closed-loop load with
+   one replica SIGKILLed mid-stream: every accepted request must still
+   complete (``kill_completion_ratio`` — failover resubmission), and the
+   killed replica must come back (``kill_respawn`` — supervised respawn
+   with backoff).  These two gates are scheduling-correctness properties
+   and hold on any machine, single-core included.
+
+The run ends with a rolling drain through the router; a dirty drain fails
+the benchmark.
+
+``--json PATH`` writes ``BENCH_router.json`` (ratio ``gates`` +
+absolute ``headline``) for ``tools/compare_bench.py`` against
+``benchmarks/baselines/BENCH_router.json``.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/bench_router.py             # full run
+  PYTHONPATH=src:. python benchmarks/bench_router.py --smoke     # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.serving.client import FrontendClient, make_payloads, run_load
+
+
+def _wait_port(path: str, proc: subprocess.Popen, timeout_s: float = 300.0) -> int:
+    deadline = time.perf_counter() + timeout_s
+    while True:
+        if proc.poll() is not None:
+            raise RuntimeError(f"server exited during startup (code {proc.returncode})")
+        try:
+            with open(path) as f:
+                return int(f.read().strip())
+        except (FileNotFoundError, ValueError):
+            if time.perf_counter() >= deadline:
+                raise TimeoutError(f"port file {path} never appeared")
+            time.sleep(0.2)
+
+
+def _spawn(cmd: list[str], log_path: str) -> subprocess.Popen:
+    env = dict(os.environ, PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    log = open(log_path, "ab")
+    return subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT, env=env)
+
+
+def _engine_flags(args) -> list[str]:
+    return [
+        "--batch", str(args.batch),
+        "--timesteps", str(args.t_hi),
+        "--max-inflight", str(4 * args.batch),
+        "--cache", args.cache,
+        "--seed", str(args.seed),
+    ]
+
+
+async def _poisson_phase(port: int, payloads: list[dict], rate: float, seed: int):
+    client = FrontendClient("127.0.0.1", port)
+    return await run_load(
+        client,
+        requests=len(payloads),
+        mode="poisson",
+        rate_req_s=rate,
+        payloads=payloads,
+        seed=seed,
+    )
+
+
+async def _closed_phase(port: int, payloads: list[dict], concurrency: int, seed: int):
+    client = FrontendClient("127.0.0.1", port)
+    return await run_load(
+        client,
+        requests=len(payloads),
+        mode="closed",
+        concurrency=concurrency,
+        payloads=payloads,
+        seed=seed,
+    )
+
+
+async def _kill_phase(port: int, payloads: list[dict], concurrency: int, seed: int,
+                      respawn_timeout_s: float):
+    """Closed-loop load with one replica SIGKILLed once work is in flight.
+
+    Returns (load stats, router stats after recovery, respawned: bool).
+    """
+    client = FrontendClient("127.0.0.1", port)
+    before = await client.stats()
+    n_replicas = before["router"]["replicas"]
+    pids = {e["idx"]: e.get("pid") for e in before["replicas"]}
+    accepted0 = before["router"]["accepted"]
+
+    load = asyncio.create_task(_closed_phase(port, payloads, concurrency, seed))
+
+    victim = None
+    deadline = time.perf_counter() + 120.0
+    while victim is None and time.perf_counter() < deadline and not load.done():
+        s = await client.stats()
+        if s["router"]["accepted"] > accepted0:
+            # kill the replica carrying the most routed work: the worst case
+            busiest = max(s["replicas"], key=lambda e: e.get("inflight_routed", 0))
+            victim = busiest["idx"]
+            os.kill(pids[victim], signal.SIGKILL)
+            emit("router", "kill/victim_replica", victim, "", "SIGKILL mid-stream")
+        else:
+            await asyncio.sleep(0.2)
+    stats = await load
+    if victim is None:
+        raise RuntimeError("kill phase never saw an accepted request to disrupt")
+
+    respawned = False
+    deadline = time.perf_counter() + respawn_timeout_s
+    while time.perf_counter() < deadline:
+        after = await client.stats()
+        if after["router"]["ready"] == n_replicas:
+            respawned = True
+            break
+        await asyncio.sleep(1.0)
+    else:
+        after = await client.stats()
+    return stats, after, respawned
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24, help="per measured phase")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2, help="lanes per replica")
+    ap.add_argument("--t-lo", type=int, default=2)
+    ap.add_argument("--t-hi", type=int, default=4)
+    ap.add_argument("--cache", choices=["off", "intra", "cross"], default="cross")
+    ap.add_argument(
+        "--rate-scale", type=float, default=3.0,
+        help="poisson arrival rate as a multiple of measured single-replica capacity",
+    )
+    ap.add_argument("--kill-requests", type=int, default=8, help="phase-3 stream length")
+    ap.add_argument("--respawn-timeout", type=float, default=300.0)
+    ap.add_argument("--json", type=str, default=None, metavar="PATH")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.kill_requests = 10, 6
+
+    run_dir = tempfile.mkdtemp(prefix="bench-router-")
+    payloads = make_payloads(
+        args.requests, args.t_lo, args.t_hi, "mixed", args.seed, task="mix",
+    )
+    warm_payloads = make_payloads(
+        4 * args.batch, args.t_lo, args.t_hi, "mixed", args.seed + 7, task="mix",
+    )
+    kill_payloads = make_payloads(
+        args.kill_requests, args.t_hi, args.t_hi, "full", args.seed + 13, task="txt2img",
+    )
+
+    # -- phase 1: single replica ----------------------------------------------
+    port_file = os.path.join(run_dir, "single.port")
+    single = _spawn(
+        [sys.executable, "-m", "repro.launch.serve", "--mode", "diffusion",
+         "--http", "127.0.0.1:0", "--port-file", port_file, *_engine_flags(args)],
+        os.path.join(run_dir, "single.log"),
+    )
+    try:
+        port = _wait_port(port_file, single)
+        asyncio.run(FrontendClient("127.0.0.1", port).wait_ready(120.0))
+        # closed-loop warmup compiles every branch class + task family; the
+        # capacity calibration is a SECOND closed run on the warm engine —
+        # the first one's wall clock is dominated by jit compile and would
+        # put the poisson rate far below steady-state capacity
+        asyncio.run(_closed_phase(port, warm_payloads, 2 * args.batch, args.seed))
+        cal = asyncio.run(_closed_phase(port, warm_payloads, 2 * args.batch, args.seed + 1))
+        capacity = cal.completed / max(cal.wall_s, 1e-9)
+        rate = args.rate_scale * capacity
+        emit("router", "single/capacity_req_s", round(capacity, 3), "req/s", "closed-loop warmup")
+        emit("router", "single/poisson_rate_req_s", round(rate, 3), "req/s")
+        s1 = asyncio.run(_poisson_phase(port, payloads, rate, args.seed))
+        sum1 = s1.summary()
+        emit("router", "single/goodput_req_s", sum1["goodput_req_s"], "req/s")
+        emit("router", "single/p50_latency_s", sum1["p50_latency_s"], "s")
+        asyncio.run(FrontendClient("127.0.0.1", port).shutdown())
+        single.wait(timeout=120)
+    finally:
+        if single.poll() is None:
+            single.kill()
+
+    # -- phase 2 + 3: the router fleet ----------------------------------------
+    port_file = os.path.join(run_dir, "router.port")
+    router = _spawn(
+        [sys.executable, "-m", "repro.launch.router",
+         "--replicas", str(args.replicas), "--http", "127.0.0.1:0",
+         "--port-file", port_file, "--run-dir", run_dir, *_engine_flags(args)],
+        os.path.join(run_dir, "router.log"),
+    )
+    try:
+        port = _wait_port(port_file, router)
+        asyncio.run(FrontendClient("127.0.0.1", port).wait_ready(120.0))
+        # warm every replica: closed-loop with enough concurrency that
+        # least-loaded routing spreads the compile work over the fleet
+        asyncio.run(_closed_phase(
+            port, warm_payloads * args.replicas, 2 * args.batch * args.replicas, args.seed,
+        ))
+        s2 = asyncio.run(_poisson_phase(port, payloads, rate, args.seed))
+        sum2 = s2.summary()
+        scaling = sum2["goodput_req_s"] / max(sum1["goodput_req_s"], 1e-9)
+        emit("router", "fleet/goodput_req_s", sum2["goodput_req_s"], "req/s",
+             f"{args.replicas} replicas, same poisson workload")
+        emit("router", "fleet/p50_latency_s", sum2["p50_latency_s"], "s")
+        emit("router", "acceptance/router_goodput_scaling", round(scaling, 3), "x",
+             "router goodput vs single replica (multi-core hosts)")
+
+        s3, rstats, respawned = asyncio.run(_kill_phase(
+            port, kill_payloads, 2 * args.batch, args.seed, args.respawn_timeout,
+        ))
+        kill_completion = s3.completed / max(s3.submitted, 1)
+        rb = rstats["router"]
+        emit("router", "kill/completion_ratio", round(kill_completion, 3), "",
+             "accepted requests surviving a replica SIGKILL")
+        emit("router", "kill/resubmitted", rb["resubmitted"], "req")
+        emit("router", "kill/evictions", rb["evictions"], "")
+        emit("router", "kill/respawned", int(respawned), "",
+             f"fleet back to {args.replicas} ready replicas")
+
+        asyncio.run(FrontendClient("127.0.0.1", port).shutdown())
+        router.wait(timeout=args.respawn_timeout)
+        drained_clean = router.returncode == 0
+        emit("router", "drain/clean_exit", int(drained_clean), "", "rolling drain exit code 0")
+    finally:
+        if router.poll() is None:
+            router.kill()
+        shutil.rmtree(run_dir, ignore_errors=True)
+
+    if args.json:
+        out = {
+            "bench": "router",
+            "config": {
+                "requests": args.requests,
+                "replicas": args.replicas,
+                "batch": args.batch,
+                "t_lo": args.t_lo,
+                "t_hi": args.t_hi,
+                "cache": args.cache,
+                "rate_scale": args.rate_scale,
+                "kill_requests": args.kill_requests,
+                "seed": args.seed,
+            },
+            # ratio gates (compare_bench.py): scaling needs a multi-core
+            # host; the kill gates are correctness and hold anywhere
+            "gates": {
+                "router_goodput_scaling": round(scaling, 3),
+                "kill_completion_ratio": round(kill_completion, 3),
+                "kill_respawn": float(respawned),
+            },
+            "headline": {
+                "single_goodput_req_s": sum1["goodput_req_s"],
+                "router_goodput_req_s": sum2["goodput_req_s"],
+                "single_p50_latency_s": sum1["p50_latency_s"],
+                "router_p50_latency_s": sum2["p50_latency_s"],
+                "router_p99_latency_s": sum2["p99_latency_s"],
+                "poisson_rate_req_s": round(rate, 3),
+                "kill_resubmitted": rb["resubmitted"],
+                "kill_evictions": rb["evictions"],
+                "drained_clean": drained_clean,
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        emit("router", "trajectory_json", args.json, "", "written")
+
+    assert kill_completion == 1.0, "kill phase lost accepted requests"
+    assert respawned, "killed replica never respawned"
+    assert drained_clean, "router drain was dirty"
+
+
+if __name__ == "__main__":
+    main()

@@ -183,8 +183,9 @@ def _init_diffusion_models(args, *, decode_images: bool = True):
     release) so external callers of the old name keep working.
     """
     warnings.warn(
-        "_init_diffusion_models(args) is deprecated; build an EngineConfig "
-        "with repro.serving.config.from_args and call init_models on it",
+        "_init_diffusion_models(args) is deprecated and will be removed; "
+        "build an EngineConfig with repro.serving.config.from_args(args) and "
+        "pass it to repro.serving.config.init_models(cfg)",
         DeprecationWarning,
         stacklevel=2,
     )
@@ -202,8 +203,9 @@ def build_continuous_engine(args, *, decode_images: bool = True):
     Returns ``(engine, ucfg, dcfg, cfg)`` exactly as before.
     """
     warnings.warn(
-        "build_continuous_engine(args) is deprecated; build an EngineConfig "
-        "with repro.serving.config.from_args and call build_engine on it",
+        "build_continuous_engine(args) is deprecated and will be removed; "
+        "build an EngineConfig with repro.serving.config.from_args(args) and "
+        "pass it to repro.serving.config.build_engine(cfg)",
         DeprecationWarning,
         stacklevel=2,
     )

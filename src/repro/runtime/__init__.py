@@ -2,7 +2,14 @@ from repro.runtime.fault_tolerance import (
     ElasticPlan,
     FaultTolerantLoop,
     PreemptionGuard,
+    RestartBackoff,
     StragglerDetector,
 )
 
-__all__ = ["ElasticPlan", "FaultTolerantLoop", "PreemptionGuard", "StragglerDetector"]
+__all__ = [
+    "ElasticPlan",
+    "FaultTolerantLoop",
+    "PreemptionGuard",
+    "RestartBackoff",
+    "StragglerDetector",
+]

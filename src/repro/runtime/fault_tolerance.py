@@ -4,7 +4,10 @@ Pieces:
 * ``StragglerDetector`` — EWMA of per-step wall time; flags steps slower
   than ``threshold x`` the moving mean.  At scale the flagged host is the
   signal for the controller to hot-swap the slice (or, under elastic
-  scaling, to re-mesh without it).
+  scaling, to re-mesh without it).  The serving replica router reuses it
+  on health-probe round trips to flag a degraded replica before it fails.
+* ``RestartBackoff`` — deterministic exponential backoff for restart
+  supervision (replica respawn, retry loops); resettable on recovery.
 * ``PreemptionGuard`` — SIGTERM handler; the loop checkpoints and exits
   cleanly inside the eviction grace window.
 * ``FaultTolerantLoop`` — checkpoint cadence + auto-resume + straggler
@@ -12,15 +15,20 @@ Pieces:
 * ``ElasticPlan`` — given a failed device count, choose the largest
   runnable (data, model) sub-mesh and the batch re-sharding: documents and
   tests the re-mesh decision logic the controller would execute.
+
+This module is importable without jax (the checkpoint import is
+type-only): the replica router runs it in a process that never builds an
+engine.
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
 import time
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
-from repro.checkpoint.manager import CheckpointManager
+if TYPE_CHECKING:
+    from repro.checkpoint.manager import CheckpointManager
 
 
 class StragglerDetector:
@@ -45,6 +53,38 @@ class StragglerDetector:
             # mask the next
             self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
         return is_straggler
+
+
+class RestartBackoff:
+    """Deterministic exponential backoff for restart supervision.
+
+    ``next_delay()`` returns the wait before the *next* restart attempt and
+    advances the failure count; ``reset()`` is called once the restarted
+    unit is healthy again, so an isolated crash pays ``base_s`` while a
+    crash loop walks up to ``max_s`` and stays there.  No jitter: restart
+    schedules stay reproducible in tests and in the router's supervision
+    log.
+    """
+
+    def __init__(self, base_s: float = 0.5, factor: float = 2.0, max_s: float = 30.0):
+        if base_s <= 0:
+            raise ValueError("base_s must be > 0")
+        if factor < 1:
+            raise ValueError("factor must be >= 1")
+        if max_s < base_s:
+            raise ValueError("max_s must be >= base_s")
+        self.base_s = base_s
+        self.factor = factor
+        self.max_s = max_s
+        self.failures = 0
+
+    def next_delay(self) -> float:
+        delay = min(self.base_s * self.factor**self.failures, self.max_s)
+        self.failures += 1
+        return delay
+
+    def reset(self) -> None:
+        self.failures = 0
 
 
 class PreemptionGuard:

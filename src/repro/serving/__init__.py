@@ -19,98 +19,89 @@
 * ``schema``    — the v2 generate-request schema: tagged task union
   (txt2img | img2img | inpaint | variations), typed validation errors,
   v1 compat shim
+* ``http``      — the stdlib HTTP/1.1 plumbing (chunked NDJSON, JSON
+  bodies) shared by the frontend and the router
 * ``frontend``  — asyncio HTTP server over the driver (chunked NDJSON
   progress streaming, backpressure as 429)
+* ``router``    — replica gateway: spawns/supervises N server processes,
+  health-checks + respawns them, routes by load and cache warmth
 * ``scenarios`` — toy-model conditioned-pipeline scenarios (img2img,
   inpaint, variations) + golden-latent fixtures for them
 * ``client``    — async HTTP client + Poisson/closed-loop load generator
 * ``metrics``   — latency percentiles, throughput, lane occupancy/balance,
   hit rate
-"""
-from repro.serving.cache import (
-    CacheState,
-    FeatureCache,
-    ShardedFeatureCache,
-    SlotRing,
-    prompt_signature,
-    signature_distance,
-)
-# NOTE: ``repro.serving.client`` is deliberately NOT imported here — it is
-# runnable as ``python -m repro.serving.client`` and importing it from the
-# package __init__ would make runpy warn about double execution.  Import
-# it explicitly: ``from repro.serving.client import FrontendClient``.
-from repro.serving.config import EngineBundle, build_engine
-from repro.serving.driver import EngineDriver, SubmitRejected, latent_digest
-from repro.serving.engine import (
-    CompletedRequest,
-    DiffusionEngine,
-    EngineConfig,
-    GenRequest,
-    ShardedDiffusionEngine,
-    StaticServer,
-    make_serving_engine,
-    serve_static,
-)
-from repro.serving.frontend import HTTPFrontend, RequestFactory
-from repro.serving.lanes import LaneState, ShardedLaneState, make_plan_arrays
-from repro.serving.metrics import ServingMetrics
-from repro.serving.policy import (
-    QualityPolicy,
-    ResolvedPolicy,
-    TIER_QUALITY,
-    default_pas_plan,
-    parse_quality,
-)
-from repro.serving.scheduler import (
-    CacheAwareScheduler,
-    FIFOScheduler,
-    PlanAwareScheduler,
-)
-from repro.serving.schema import (
-    RequestSpec,
-    SchemaError,
-    is_v1,
-    parse_request,
-    upgrade_v1,
-)
 
-__all__ = [
-    "CacheAwareScheduler",
-    "CacheState",
-    "CompletedRequest",
-    "DiffusionEngine",
-    "EngineBundle",
-    "EngineConfig",
-    "EngineDriver",
-    "FIFOScheduler",
-    "FeatureCache",
-    "GenRequest",
-    "HTTPFrontend",
-    "LaneState",
-    "PlanAwareScheduler",
-    "QualityPolicy",
-    "RequestFactory",
-    "RequestSpec",
-    "ResolvedPolicy",
-    "SchemaError",
-    "ServingMetrics",
-    "TIER_QUALITY",
-    "ShardedDiffusionEngine",
-    "ShardedFeatureCache",
-    "ShardedLaneState",
-    "SlotRing",
-    "StaticServer",
-    "SubmitRejected",
-    "build_engine",
-    "default_pas_plan",
-    "is_v1",
-    "latent_digest",
-    "make_plan_arrays",
-    "make_serving_engine",
-    "parse_quality",
-    "parse_request",
-    "prompt_signature",
-    "serve_static",
-    "signature_distance",
-    "upgrade_v1",
-]
+Exports resolve lazily (PEP 562): importing :mod:`repro.serving` is free,
+and the jax-heavy engine modules only load when a name that needs them is
+touched.  That is what lets the router process — which supervises engine
+*subprocesses* but never builds one itself — import
+``repro.serving.router`` / ``repro.serving.http`` / ``repro.serving.client``
+without paying the jax import.
+
+NOTE: ``repro.serving.client`` and ``repro.serving.router`` are deliberately
+NOT exported here — both are runnable as ``python -m`` modules and
+importing them from the package ``__init__`` would make runpy warn about
+double execution.  Import them explicitly:
+``from repro.serving.client import FrontendClient`` /
+``from repro.serving.router import ReplicaRouter``.
+"""
+from __future__ import annotations
+
+import importlib
+
+#: export name -> defining submodule (resolved on first attribute access)
+_EXPORTS = {
+    "CacheState": "repro.serving.cache",
+    "FeatureCache": "repro.serving.cache",
+    "ShardedFeatureCache": "repro.serving.cache",
+    "SlotRing": "repro.serving.cache",
+    "prompt_signature": "repro.serving.cache",
+    "signature_distance": "repro.serving.cache",
+    "EngineBundle": "repro.serving.config",
+    "build_engine": "repro.serving.config",
+    "EngineDriver": "repro.serving.driver",
+    "SubmitRejected": "repro.serving.driver",
+    "latent_digest": "repro.serving.driver",
+    "CompletedRequest": "repro.serving.engine",
+    "DiffusionEngine": "repro.serving.engine",
+    "EngineConfig": "repro.serving.engine",
+    "GenRequest": "repro.serving.engine",
+    "ShardedDiffusionEngine": "repro.serving.engine",
+    "StaticServer": "repro.serving.engine",
+    "make_serving_engine": "repro.serving.engine",
+    "serve_static": "repro.serving.engine",
+    "HTTPFrontend": "repro.serving.frontend",
+    "RequestFactory": "repro.serving.frontend",
+    "LaneState": "repro.serving.lanes",
+    "ShardedLaneState": "repro.serving.lanes",
+    "make_plan_arrays": "repro.serving.lanes",
+    "ServingMetrics": "repro.serving.metrics",
+    "QualityPolicy": "repro.serving.policy",
+    "ResolvedPolicy": "repro.serving.policy",
+    "TIER_QUALITY": "repro.serving.policy",
+    "default_pas_plan": "repro.serving.policy",
+    "parse_quality": "repro.serving.policy",
+    "CacheAwareScheduler": "repro.serving.scheduler",
+    "FIFOScheduler": "repro.serving.scheduler",
+    "PlanAwareScheduler": "repro.serving.scheduler",
+    "RequestSpec": "repro.serving.schema",
+    "SchemaError": "repro.serving.schema",
+    "is_v1": "repro.serving.schema",
+    "parse_request": "repro.serving.schema",
+    "upgrade_v1": "repro.serving.schema",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value  # cache: subsequent access skips __getattr__
+    return value
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_EXPORTS))

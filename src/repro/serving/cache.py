@@ -343,6 +343,23 @@ class SlotRing:
             "cache_evictions": self.evictions,
         }
 
+    def slot_summary(self, ndigits: int = 4) -> list[dict]:
+        """Wire-friendly keys of the warm slots — bucket, schedule offset,
+        owner rid and the (rounded) prompt signature, never the feature
+        tensors.  This is what a replica publishes in ``GET /stats`` so the
+        router can score incoming requests against another process's ring
+        (:func:`signature_distance` on the payload's synthesized signature).
+        """
+        return [
+            {
+                "bucket": int(self.bucket[s]),
+                "offset": int(self.offset[s]),
+                "rid": int(self.rid[s]),
+                "sig": [round(float(x), ndigits) for x in self.sig[s]],
+            }
+            for s in np.nonzero(self.valid)[0]
+        ]
+
 
 class FeatureCache(SlotRing):
     """Fixed-size LRU feature cache: device slots + host keys.
@@ -420,6 +437,15 @@ class FeatureCache(SlotRing):
             "cache_slots": self.n_slots,
             "cache_warm_slots": self.n_warm,
             **self.counters(),
+        }
+
+    def slots_summary(self) -> dict:
+        """Ring geometry + warm-slot keys, as published in ``GET /stats``."""
+        return {
+            "mode": self.mode,
+            "threshold": self.threshold,
+            "t_bucket": self.t_bucket,
+            "rings": [self.slot_summary()],
         }
 
 
@@ -598,3 +624,12 @@ class ShardedFeatureCache:
             round(r.probe_hits / r.probes, 3) if r.probes else 0.0 for r in self.rings
         ]
         return agg
+
+    def slots_summary(self) -> dict:
+        """Per-shard ring geometry + warm-slot keys (``GET /stats``)."""
+        return {
+            "mode": self.mode,
+            "threshold": self.threshold,
+            "t_bucket": self.t_bucket,
+            "rings": [ring.slot_summary() for ring in self.rings],
+        }

@@ -468,6 +468,30 @@ async def _amain(args) -> int:
     )
     summary = stats.summary()
     print(f"[client] {summary}")
+    router_ok = True
+    if args.router:
+        rstats = await client.stats()
+        rblock = rstats.get("router")
+        if not rblock:
+            print(
+                "[client] FAIL: --router but /stats carries no 'router' section "
+                "(is the endpoint a plain server?)",
+                file=sys.stderr,
+            )
+            router_ok = False
+        else:
+            print(f"[client] router: {rblock}")
+            for rep in rstats.get("replicas", ()):
+                line = {k: rep.get(k) for k in (
+                    "idx", "state", "generation", "respawns", "evictions",
+                    "inflight_routed",
+                )}
+                line["completed"] = (rep.get("stats") or {}).get("completed")
+                print(f"[client] replica: {line}")
+            fleet = rstats.get("fleet")
+            if fleet:
+                print(f"[client] fleet: {fleet}")
+            router_ok = rblock.get("ready", 0) >= 1
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
@@ -480,6 +504,7 @@ async def _amain(args) -> int:
         stats.completed == args.requests - args.cancel
         and stats.cancelled == args.cancel
         and stats.failed == 0
+        and router_ok
     )
     if not ok:
         print(
@@ -535,6 +560,11 @@ def main() -> None:
     ap.add_argument(
         "--cancel", type=int, default=0,
         help="cancel this many requests mid-denoise (after their first step)",
+    )
+    ap.add_argument(
+        "--router", action="store_true",
+        help="the endpoint is a replica router (repro.launch.router): assert "
+        "the router /stats sections exist and print the per-replica summary",
     )
     ap.add_argument(
         "--shutdown", action="store_true",

@@ -352,8 +352,16 @@ class EngineDriver:
     def _snapshot(self) -> dict:
         eng = self.engine
         eng.metrics.wall_s = self._clock()  # driver lifetime = serving wall
+        cache = getattr(eng, "cache", None)
+        cache_stats: dict = {}
+        if cache is not None:
+            # ring counters + warm-slot keys: what the replica router scores
+            # incoming requests against (cross-process cache-warmth routing)
+            cache_stats = dict(cache.stats())
+            cache_stats["cache_slots_summary"] = cache.slots_summary()
         return dict(
             eng.metrics.summary(),
+            **cache_stats,
             mode=eng._mode_name,
             lanes=eng.config.n_lanes,
             kernels=getattr(eng.config, "backend", "xla"),

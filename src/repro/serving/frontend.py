@@ -64,27 +64,32 @@ import asyncio
 import hashlib
 import itertools
 import json
+import os
 import threading
-from http import HTTPStatus
 from typing import Any
 
 import numpy as np
 
 from repro.common.types import PASPlan
 from repro.serving.driver import EngineDriver, SubmitRejected, TERMINAL_EVENTS
+# the HTTP/1.1 plumbing moved to ``repro.serving.http`` (shared with the
+# replica router); re-exported here so pre-router import paths keep working
+from repro.serving.http import (  # noqa: F401
+    DEPRECATION_HEADER,
+    MAX_BODY as _MAX_BODY,
+    chunk,
+    read_http_request,
+    send_json,
+    start_chunked,
+)
 # plan + threshold resolution lives in exactly one module now; the old
 # ``frontend.default_pas_plan`` import path keeps working via this re-export
 from repro.serving.policy import QualityPolicy, default_pas_plan  # noqa: F401
 from repro.serving.schema import RequestSpec, SchemaError, parse_request
 
-_MAX_BODY = 1 << 20  # 1 MiB: generate payloads are tiny JSON
-
 # the plan-field tuple moved to the schema module with the rest of request
 # validation; re-exported for pre-schema import paths
 from repro.serving.schema import PLAN_FIELDS as _PLAN_FIELDS  # noqa: E402
-
-#: response header every v1-shim response carries (RFC 9745 shape)
-DEPRECATION_HEADER = (b"Deprecation", b'version="v1"')
 
 
 class RequestFactory:
@@ -285,75 +290,6 @@ class RequestFactory:
 
 
 # ---------------------------------------------------------------------------
-# Minimal HTTP/1.1 plumbing (stdlib only — no aiohttp in the container)
-# ---------------------------------------------------------------------------
-
-
-async def read_http_request(reader: asyncio.StreamReader) -> tuple[str, str, dict, bytes]:
-    """Parse one request: (method, path, lowercase headers, body)."""
-    line = await reader.readline()
-    parts = line.decode("latin-1").split()
-    if len(parts) < 3:
-        raise ValueError(f"malformed request line: {line!r}")
-    method, path = parts[0].upper(), parts[1]
-    headers: dict[str, str] = {}
-    while True:
-        h = await reader.readline()
-        if h in (b"\r\n", b"\n", b""):
-            break
-        k, _, v = h.decode("latin-1").partition(":")
-        headers[k.strip().lower()] = v.strip()
-    n = int(headers.get("content-length", 0))
-    if n > _MAX_BODY:
-        raise ValueError(f"body too large ({n} bytes)")
-    body = await reader.readexactly(n) if n > 0 else b""
-    return method, path, headers, body
-
-
-def _status_line(status: int) -> bytes:
-    phrase = HTTPStatus(status).phrase
-    return f"HTTP/1.1 {status} {phrase}\r\n".encode()
-
-
-def _extra_header_bytes(extra_headers: tuple[tuple[bytes, bytes], ...]) -> bytes:
-    return b"".join(k + b": " + v + b"\r\n" for k, v in extra_headers)
-
-
-async def send_json(
-    writer: asyncio.StreamWriter, status: int, payload: dict,
-    extra_headers: tuple[tuple[bytes, bytes], ...] = (),
-) -> None:
-    body = (json.dumps(payload) + "\n").encode()
-    writer.write(
-        _status_line(status)
-        + b"Content-Type: application/json\r\n"
-        + f"Content-Length: {len(body)}\r\n".encode()
-        + _extra_header_bytes(extra_headers)
-        + b"Connection: close\r\n\r\n"
-        + body
-    )
-    await writer.drain()
-
-
-async def start_chunked(
-    writer: asyncio.StreamWriter, status: int = 200,
-    extra_headers: tuple[tuple[bytes, bytes], ...] = (),
-) -> None:
-    writer.write(
-        _status_line(status)
-        + b"Content-Type: application/x-ndjson\r\n"
-        + b"Transfer-Encoding: chunked\r\n"
-        + _extra_header_bytes(extra_headers)
-        + b"Connection: close\r\n\r\n"
-    )
-    await writer.drain()
-
-
-def chunk(data: bytes) -> bytes:
-    return f"{len(data):x}\r\n".encode() + data + b"\r\n"
-
-
-# ---------------------------------------------------------------------------
 # The frontend server
 # ---------------------------------------------------------------------------
 
@@ -475,6 +411,19 @@ class HTTPFrontend:
             except (ConnectionError, OSError):
                 pass
 
+    def _routing_info(self) -> dict:
+        """Static request-synthesis geometry the replica router needs to
+        score payloads against this server's cache ring from another
+        process (plus the pid, so a supervisor can identify the replica)."""
+        f = self.factory
+        return {
+            "pid": os.getpid(),
+            "ctx_len": f.ucfg.ctx_len,
+            "ctx_dim": f.ucfg.ctx_dim,
+            "timesteps_train": f.dcfg.timesteps_train,
+            "max_steps": f.max_steps,
+        }
+
     async def _handle_health(self, writer: asyncio.StreamWriter) -> None:
         eng = self.driver.engine
         await send_json(writer, 200, {
@@ -486,6 +435,7 @@ class HTTPFrontend:
             "lanes": eng.config.n_lanes,
             "shards": eng.config.n_shards,
             "mode": eng._mode_name,
+            "pid": os.getpid(),
         })
 
     async def _handle_stats(self, writer: asyncio.StreamWriter) -> None:
@@ -498,6 +448,7 @@ class HTTPFrontend:
             return await send_json(
                 writer, 503, {"error": "stats probe timed out (engine busy)"}
             )
+        summary = dict(summary, routing=self._routing_info())
         await send_json(writer, 200, summary)
 
     async def _handle_cancel(self, writer: asyncio.StreamWriter, payload: dict) -> None:

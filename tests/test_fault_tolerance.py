@@ -135,3 +135,37 @@ def test_loop_preemption_checkpoints(tmp_path):
     loop = FaultTolerantLoop(ckpt=cm, save_every=100, max_steps=10)
     loop.run({"x": np.zeros(1)}, step_fn, guard=guard)
     assert cm.list_steps() == [5], "preemption must publish step+1 immediately"
+
+
+# ---------------------------------------------------------------------------
+# RestartBackoff (the router's respawn schedule)
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_walks_up_and_caps():
+    from repro.runtime.fault_tolerance import RestartBackoff
+
+    b = RestartBackoff(base_s=0.5, factor=2.0, max_s=30.0)
+    delays = [b.next_delay() for _ in range(8)]
+    assert delays == [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 30.0, 30.0]
+
+
+def test_backoff_reset_after_recovery():
+    from repro.runtime.fault_tolerance import RestartBackoff
+
+    b = RestartBackoff(base_s=1.0, factor=3.0, max_s=10.0)
+    assert b.next_delay() == 1.0
+    assert b.next_delay() == 3.0
+    b.reset()
+    assert b.next_delay() == 1.0, "an isolated crash pays base_s again"
+
+
+def test_backoff_validates_parameters():
+    from repro.runtime.fault_tolerance import RestartBackoff
+
+    with pytest.raises(ValueError):
+        RestartBackoff(base_s=0.0)
+    with pytest.raises(ValueError):
+        RestartBackoff(factor=0.5)
+    with pytest.raises(ValueError):
+        RestartBackoff(base_s=2.0, max_s=1.0)

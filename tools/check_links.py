@@ -1,0 +1,82 @@
+"""Relative-link checker for the repo's markdown docs.
+
+Scans ``README.md`` and ``docs/*.md`` (plus any extra files passed on the
+command line) for markdown links and inline ``<a href>`` targets, and
+fails when a *relative* target — a file or directory in this repo — does
+not exist.  External URLs (``http(s)://``, ``mailto:``) and pure
+``#fragment`` anchors are skipped: this is a dead-file gate for the CI
+lint job, not a crawler.  Stdlib only.
+
+Usage:
+  python tools/check_links.py                 # README.md + docs/*.md
+  python tools/check_links.py PATH [PATH...]  # explicit file set
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+#: inline markdown links: [text](target)  — images too ( ![alt](target) )
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+#: raw html anchors occasionally used in markdown
+HREF = re.compile(r"href=[\"']([^\"']+)[\"']")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_targets(text: str):
+    for m in MD_LINK.finditer(text):
+        yield m.group(1)
+    for m in HREF.finditer(text):
+        yield m.group(1)
+
+
+def check_file(path: str, repo_root: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # fenced code blocks show command lines with () and []; don't lint them
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    failures = []
+    base = os.path.dirname(os.path.abspath(path))
+    for target in iter_targets(text):
+        if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]  # FILE.md#section -> FILE.md
+        if not rel:
+            continue
+        if rel.startswith("/"):
+            resolved = os.path.join(repo_root, rel.lstrip("/"))
+        else:
+            resolved = os.path.join(base, rel)
+        # targets that climb out of the repo are GitHub web-relative URLs
+        # (e.g. the ../../actions/... CI badge), not repo files
+        if not os.path.realpath(resolved).startswith(os.path.realpath(repo_root) + os.sep):
+            continue
+        if not os.path.exists(resolved):
+            failures.append(f"{path}: dead relative link {target!r} -> {resolved}")
+    return failures
+
+
+def main() -> int:
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = sys.argv[1:] or (
+        [os.path.join(repo_root, "README.md")]
+        + sorted(glob.glob(os.path.join(repo_root, "docs", "*.md")))
+    )
+    failures: list[str] = []
+    for path in files:
+        if not os.path.exists(path):
+            failures.append(f"{path}: file does not exist")
+            continue
+        failures.extend(check_file(path, repo_root))
+    for msg in failures:
+        print(f"[check_links] FAIL: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"[check_links] all relative links resolve ({len(files)} file(s))")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

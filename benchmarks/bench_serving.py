@@ -488,6 +488,10 @@ def main() -> None:
                 cache_slots=args.cache_slots,
                 cache_threshold=args.cache_threshold,
                 cache_t_bucket=args.cache_bucket,
+                # this bench pins the SHARD-LOCAL baseline (emptiest-shard
+                # admission, no spill); bench_cache_tier.py measures what
+                # gossip + the host-RAM spill ring buy on the same stream
+                cache_gossip=False,
             )
 
         engine_sh = ShardedDiffusionEngine(
@@ -611,6 +615,14 @@ def _write_trajectory(
         headline["sharded_p99_latency_s"] = best["sharded_p99_latency_s"]
         if "shard_hit_rates" in best:
             headline["shard_hit_rates"] = best["shard_hit_rates"]
+            # the global-cache-tier trend pair: the fleet-level pooled hit
+            # rate on the sharded run, and how unevenly warmth landed
+            # across shards (max - min per-shard hit rate; 0 = even)
+            headline["pooled_shard_hit_rate"] = round(best.get("cache_hit_rate", 0.0), 3)
+            shard_rates = [float(r) for r in best["shard_hit_rates"]]
+            headline["shard_warmth_imbalance"] = (
+                round(max(shard_rates) - min(shard_rates), 3) if shard_rates else 0.0
+            )
     if sharded_capacity:
         gates["sharded_capacity_speedup"] = round(sharded_capacity["capacity_speedup"], 3)
         gates["shard_occupancy_balance"] = round(

@@ -67,9 +67,12 @@ def replica_command(args) -> list[str]:
         "--cache-threshold", str(args.cache_threshold),
         "--cache-slots", str(args.cache_slots),
         "--cache-bucket", str(args.cache_bucket),
+        "--cache-spill-mb", str(args.cache_spill_mb),
         "--seed", str(args.seed),  # same weights on every replica: failover
                                    # reproduces the original latent_digest
     ]
+    if not args.cache_gossip:
+        cmd.append("--no-cache-gossip")
     if args.pas:
         cmd.append("--pas")
     if args.quality is not None:
@@ -110,6 +113,18 @@ def main() -> None:
     ap.add_argument("--cache-threshold", type=float, default=0.15)
     ap.add_argument("--cache-slots", type=int, default=16)
     ap.add_argument("--cache-bucket", type=int, default=125)
+    ap.add_argument(
+        "--cache-spill-mb", type=float, default=0.0,
+        help="per-replica host-RAM spill tier budget in MiB (0 = off)",
+    )
+    ap.add_argument(
+        "--cache-gossip", dest="cache_gossip", action="store_true", default=True,
+        help="per-replica warm-shard admission routing (default on)",
+    )
+    ap.add_argument(
+        "--no-cache-gossip", dest="cache_gossip", action="store_false",
+        help="disable warm-shard admission routing on every replica",
+    )
     ap.add_argument("--max-inflight", type=int, default=32, help="per replica")
     ap.add_argument("--seed", type=int, default=0)
     # router knobs

@@ -447,6 +447,22 @@ def main() -> None:
         help="timestep bucket width (train-timestep units) for cache keys",
     )
     ap.add_argument(
+        "--cache-spill-mb", type=float, default=0.0,
+        help="host-RAM spill tier byte budget in MiB (0 = off): HBM-ring "
+        "evictions demote into a pinned host ring and admission prefetches "
+        "spill-resident slots back onto the device before their first "
+        "planned FULL step",
+    )
+    ap.add_argument(
+        "--cache-gossip", dest="cache_gossip", action="store_true", default=True,
+        help="route admissions to the cache-warm shard via the scheduler's "
+        "fleet-wide warmth map (sharded engine; default on)",
+    )
+    ap.add_argument(
+        "--no-cache-gossip", dest="cache_gossip", action="store_false",
+        help="disable warm-shard admission routing (emptiest-shard only)",
+    )
+    ap.add_argument(
         "--http", metavar="HOST:PORT", default=None,
         help="serve the continuous engine over an asyncio HTTP frontend "
         "(PORT 0 = ephemeral) instead of running a synthetic batch; "

@@ -37,6 +37,8 @@ always real cross-request sharing.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax
@@ -45,6 +47,12 @@ import numpy as np
 
 from repro.common.types import UNetConfig
 from repro.core import sampler as SM
+
+#: slot cap on one ring's published key table (``slots_summary`` /
+#: ``key_delta``): an over-provisioned ring must not bloat every ``/stats``
+#: poll, so only the most-recently-used slots are reported and consumers
+#: must tolerate truncation (the router scores whatever subset it sees)
+MAX_SUMMARY_SLOTS = 64
 
 
 class CacheState(NamedTuple):
@@ -93,6 +101,25 @@ def _insert_slots(
     )
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _upload_slot(
+    cache: CacheState,
+    slot: jax.Array,  # int32 scalar target slot
+    f_sk: jax.Array,  # [2, L_sk, C_sk] spilled sketch features
+    f_rf: jax.Array,  # [2, L_rf, C_rf] spilled refine features
+) -> CacheState:
+    """Promote one spill-resident capture back onto the device ring.
+
+    The reverse of the eviction demote: a single-slot scatter of host
+    (numpy) features, so a spill round-trip is float32-lossless — the
+    promoted slot serves hits bit-identically to the original capture.
+    """
+    return CacheState(
+        f_sk=cache.f_sk.at[slot].set(f_sk),
+        f_rf=cache.f_rf.at[slot].set(f_rf),
+    )
+
+
 def select_entry_features(
     own: jax.Array,  # [2N, L, C] lane-cache features
     cached: jax.Array,  # [S, 2, L, C] cache slots
@@ -112,6 +139,130 @@ def select_entry_features(
     cond = jnp.where(use, pick[:, 0], own[:n])
     unc = jnp.where(use, pick[:, 1], own[n:])
     return jnp.concatenate([cond, unc], axis=0)
+
+
+class _GenClock:
+    """Monotone generation counter, shareable across rings.
+
+    Every key-table mutation (reserve / refresh / evict-overwrite) ticks
+    it; the sharded cache hands one clock to all of its rings so slot
+    generations are totally ordered engine-wide and one scalar ``since``
+    cursor can drive the incremental ``/cache/keys`` delta protocol.
+    """
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+
+@dataclass
+class SpillEntry:
+    """One demoted capture parked in host RAM (features included)."""
+
+    bucket: int
+    offset: int
+    rid: int
+    sig: np.ndarray  # [sig_dim] float32
+    f_sk: np.ndarray  # [2, L_sk, C_sk] float32
+    f_rf: np.ndarray  # [2, L_rf, C_rf] float32
+    nbytes: int
+
+
+class SpillRing:
+    """Host-RAM spill tier under the HBM slot ring: a byte-capped LRU of
+    demoted feature captures.
+
+    HBM-ring evictions :meth:`put` the victim's features (numpy copies —
+    float32-lossless) here instead of dropping them; cache-aware admission
+    probes the spill with the same key policy as the device ring and
+    promotes matches back onto a device slot before the lane's first
+    planned FULL step.  Effective cache capacity thus scales with
+    ``capacity_bytes`` (host RAM) rather than device slot count.  Entries
+    are keyed by ``(rid, bucket, offset)`` — a newer demotion of the same
+    capture refreshes in place.
+    """
+
+    def __init__(self, capacity_bytes: int, *, mode: str = "cross"):
+        if capacity_bytes < 0:
+            raise ValueError("spill capacity must be >= 0 bytes")
+        self.capacity_bytes = int(capacity_bytes)
+        self.mode = mode
+        self._entries: OrderedDict[tuple, SpillEntry] = OrderedDict()
+        self.bytes = 0
+        self.demotions = 0
+        self.promotions = 0
+        self.spill_evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def reset(self) -> None:
+        self._entries.clear()
+        self.bytes = 0
+        self.demotions = 0
+        self.promotions = 0
+        self.spill_evictions = 0
+
+    def put(
+        self, bucket: int, offset: int, rid: int, sig: np.ndarray,
+        f_sk: np.ndarray, f_rf: np.ndarray,
+    ) -> bool:
+        """Admit (or refresh) one demoted capture; False = too big to hold."""
+        f_sk = np.ascontiguousarray(f_sk, np.float32)
+        f_rf = np.ascontiguousarray(f_rf, np.float32)
+        nbytes = f_sk.nbytes + f_rf.nbytes
+        if nbytes > self.capacity_bytes:
+            return False
+        key = (int(rid), int(bucket), int(offset))
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes -= old.nbytes
+        while self.bytes + nbytes > self.capacity_bytes and self._entries:
+            _, victim = self._entries.popitem(last=False)
+            self.bytes -= victim.nbytes
+            self.spill_evictions += 1
+        self._entries[key] = SpillEntry(
+            bucket=int(bucket), offset=int(offset), rid=int(rid),
+            sig=np.asarray(sig, np.float32).copy(),
+            f_sk=f_sk, f_rf=f_rf, nbytes=nbytes,
+        )
+        self.bytes += nbytes
+        self.demotions += 1
+        return True
+
+    def probe(
+        self, bucket: int, sig: np.ndarray, rid: int, threshold: float,
+        offset: int = 0,
+    ) -> SpillEntry | None:
+        """Best spill entry for (bucket, signature, offset) under the same
+        strict-inequality hit policy as the device ring (mode-scoped rid
+        filter included), with an LRU touch on the match."""
+        if threshold <= 0 or not self._entries:
+            return None
+        best_key, best_d = None, np.inf
+        for key, e in self._entries.items():
+            if e.bucket != bucket or e.offset != offset:
+                continue
+            if (e.rid == rid) != (self.mode == "intra"):
+                continue
+            d = signature_distance(sig, e.sig)
+            if d < best_d:
+                best_key, best_d = key, d
+        if best_key is None or not best_d < threshold:
+            return None
+        self._entries.move_to_end(best_key)
+        return self._entries[best_key]
+
+    def stats(self) -> dict:
+        return {
+            "cache_spill_capacity_bytes": self.capacity_bytes,
+            "cache_spill_bytes": self.bytes,
+            "cache_spill_entries": len(self._entries),
+            "cache_spill_demotions": self.demotions,
+            "cache_spill_promotions": self.promotions,
+            "cache_spill_evictions": self.spill_evictions,
+        }
 
 
 class SlotRing:
@@ -147,6 +298,13 @@ class SlotRing:
         self.threshold = threshold
         self.t_bucket = t_bucket
         self.sig_dim = sig_dim
+        #: eviction hook: called with the victim slot index *before* its
+        #: metadata is overwritten (features still on device) — the spill
+        #: tier demotes here; None = evictions simply drop the capture
+        self.on_evict = None
+        #: generation clock ticked by every key-table mutation; the sharded
+        #: cache replaces it with one clock shared across its rings
+        self._clock = _GenClock()
         self.reset_meta()
 
     def reset_meta(self) -> None:
@@ -162,11 +320,21 @@ class SlotRing:
         self.offset = np.zeros((s,), np.int64)
         self.valid = np.zeros((s,), bool)
         self.last_use = np.zeros((s,), np.int64)
+        #: per-slot generation stamp (clock value of the last key write);
+        #: strictly increasing across writes, so ``key_delta(since)`` can
+        #: ship only the slots that changed after a consumer's cursor
+        self.gen = np.zeros((s,), np.int64)
+        self._clock.value = 0
         self._tick = 0
         self.probes = 0
         self.probe_hits = 0
         self.inserts = 0
         self.evictions = 0
+
+    @property
+    def version(self) -> int:
+        """Clock value of the newest key write (0 = cold ring)."""
+        return self._clock.value
 
     # -- keys ----------------------------------------------------------------
 
@@ -324,11 +492,17 @@ class SlotRing:
                     return None
                 slot = int(avail[np.argmin(self.last_use[avail])])
                 self.evictions += 1
+                if self.on_evict is not None:
+                    # victim's keys (and device features) are still intact:
+                    # the spill tier copies them out before the overwrite
+                    self.on_evict(slot)
         self.bucket[slot] = b
         self.sig[slot] = np.asarray(sig, np.float32)
         self.rid[slot] = rid
         self.offset[slot] = offset
         self.valid[slot] = True
+        self._clock.value += 1
+        self.gen[slot] = self._clock.value
         self.inserts += 1
         self._touch(slot)
         return slot
@@ -343,22 +517,45 @@ class SlotRing:
             "cache_evictions": self.evictions,
         }
 
-    def slot_summary(self, ndigits: int = 4) -> list[dict]:
-        """Wire-friendly keys of the warm slots — bucket, schedule offset,
-        owner rid and the (rounded) prompt signature, never the feature
-        tensors.  This is what a replica publishes in ``GET /stats`` so the
-        router can score incoming requests against another process's ring
-        (:func:`signature_distance` on the payload's synthesized signature).
+    def _slot_row(self, s: int, ndigits: int) -> dict:
+        return {
+            "slot": int(s),
+            "gen": int(self.gen[s]),
+            "bucket": int(self.bucket[s]),
+            "offset": int(self.offset[s]),
+            "rid": int(self.rid[s]),
+            "sig": [round(float(x), ndigits) for x in self.sig[s]],
+        }
+
+    def slot_summary(
+        self, ndigits: int = 4, max_slots: int | None = MAX_SUMMARY_SLOTS
+    ) -> list[dict]:
+        """Wire-friendly keys of the warm slots — slot index, generation
+        stamp, bucket, schedule offset, owner rid and the (rounded) prompt
+        signature, never the feature tensors.  This is what a replica
+        publishes in ``GET /stats`` so the router can score incoming
+        requests against another process's ring
+        (:func:`signature_distance` on the payload's synthesized
+        signature).  ``max_slots`` bounds the payload: when the ring holds
+        more warm slots, only the most-recently-used ones are reported
+        (consumers must treat the table as a best-effort subset).
         """
-        return [
-            {
-                "bucket": int(self.bucket[s]),
-                "offset": int(self.offset[s]),
-                "rid": int(self.rid[s]),
-                "sig": [round(float(x), ndigits) for x in self.sig[s]],
-            }
-            for s in np.nonzero(self.valid)[0]
-        ]
+        warm = np.nonzero(self.valid)[0]
+        if max_slots is not None and warm.size > max_slots:
+            keep = warm[np.argsort(self.last_use[warm])][-max_slots:]
+            warm = np.sort(keep)
+        return [self._slot_row(int(s), ndigits) for s in warm]
+
+    def key_delta(self, since: int = 0, ndigits: int = 4) -> list[dict]:
+        """Warm-slot rows written after generation ``since`` (same row
+        shape as :meth:`slot_summary` — each row carries its slot index,
+        so consumers merge deltas by replacing prior rows per slot).
+        Capped at :data:`MAX_SUMMARY_SLOTS` newest generations."""
+        fresh = np.nonzero(self.valid & (self.gen > int(since)))[0]
+        if fresh.size > MAX_SUMMARY_SLOTS:
+            keep = fresh[np.argsort(self.gen[fresh])][-MAX_SUMMARY_SLOTS:]
+            fresh = np.sort(keep)
+        return [self._slot_row(int(s), ndigits) for s in fresh]
 
 
 class FeatureCache(SlotRing):
@@ -380,6 +577,7 @@ class FeatureCache(SlotRing):
         threshold: float = 0.15,
         t_bucket: int = 125,
         mode: str = "cross",
+        spill_mb: float = 0.0,
         dtype=jnp.float32,
     ):
         self._sk_shape = (n_slots, 2) + SM.feat_shape(ucfg, e_sk, 1)[1:]
@@ -388,6 +586,10 @@ class FeatureCache(SlotRing):
         super().__init__(
             n_slots, ucfg.ctx_dim, threshold=threshold, t_bucket=t_bucket, mode=mode
         )
+        self.spill: SpillRing | None = None
+        if spill_mb > 0:
+            self.spill = SpillRing(int(spill_mb * 1024 * 1024), mode=mode)
+            self.on_evict = self._demote
         self._reset_state()
 
     # -- lifecycle -----------------------------------------------------------
@@ -401,7 +603,55 @@ class FeatureCache(SlotRing):
     def reset(self) -> None:
         """Drop all slots and counters (cold cache)."""
         self.reset_meta()
+        if self.spill is not None:
+            self.spill.reset()
         self._reset_state()
+
+    # -- spill tier ----------------------------------------------------------
+
+    def _demote(self, slot: int) -> None:
+        """Eviction hook: park the victim's features in host RAM under its
+        old key (a float32-lossless numpy copy) before the overwrite."""
+        if not self.valid[slot]:
+            return
+        self.spill.put(
+            int(self.bucket[slot]), int(self.offset[slot]), int(self.rid[slot]),
+            self.sig[slot],
+            np.asarray(self.state.f_sk[slot]), np.asarray(self.state.f_rf[slot]),
+        )
+
+    def promote(
+        self, t: int, sig: np.ndarray, rid: int, threshold: float | None = None,
+        offset: int = 0, exclude: set[int] | tuple = (),
+    ) -> int | None:
+        """Probe the spill tier for (t, sig, offset) and, on a match, lift
+        the entry back onto a device slot (reserve + single-slot upload).
+
+        The device slot keeps the *original* owner's rid — in cross mode a
+        hit requires ``slot.rid != requester``, so re-keying the slot to
+        the requester would make the promoted features unusable to the very
+        request that warranted the promotion.  The entry stays spill-
+        resident (LRU-touched), so a later eviction of the promoted slot
+        just refreshes it.  Returns the device slot or None.
+        """
+        if self.spill is None:
+            return None
+        thr = self.threshold if threshold is None else threshold
+        entry = self.spill.probe(self.bucket_of(t), sig, rid, thr, offset)
+        if entry is None:
+            return None
+        slot = self.reserve(
+            entry.bucket * self.t_bucket, entry.sig, entry.rid,
+            exclude=exclude, offset=entry.offset,
+        )
+        if slot is None:
+            return None
+        self.state = _upload_slot(
+            self.state, jnp.int32(slot),
+            jnp.asarray(entry.f_sk), jnp.asarray(entry.f_rf),
+        )
+        self.spill.promotions += 1
+        return slot
 
     # -- device insert -------------------------------------------------------
 
@@ -432,20 +682,42 @@ class FeatureCache(SlotRing):
     # -- reporting -----------------------------------------------------------
 
     def stats(self) -> dict:
-        return {
+        out = {
             "cache_mode": self.mode,
             "cache_slots": self.n_slots,
             "cache_warm_slots": self.n_warm,
             **self.counters(),
         }
+        if self.spill is not None:
+            out.update(self.spill.stats())
+        return out
 
     def slots_summary(self) -> dict:
-        """Ring geometry + warm-slot keys, as published in ``GET /stats``."""
+        """Ring geometry + warm-slot keys, as published in ``GET /stats``.
+
+        ``version`` is the ring's newest key generation: a consumer that
+        remembers it can ask ``key_delta(since=version)`` for just the
+        changes (and treats a version that went *backwards* as a restart,
+        replacing its whole mirror).
+        """
         return {
             "mode": self.mode,
             "threshold": self.threshold,
             "t_bucket": self.t_bucket,
+            "version": self.version,
             "rings": [self.slot_summary()],
+        }
+
+    def keys_delta(self, since: int = 0) -> dict:
+        """Incremental form of :meth:`slots_summary`: only slots whose key
+        generation exceeds ``since`` (the ``GET /cache/keys`` payload)."""
+        return {
+            "mode": self.mode,
+            "threshold": self.threshold,
+            "t_bucket": self.t_bucket,
+            "version": self.version,
+            "since": int(since),
+            "rings": [self.key_delta(since)],
         }
 
 
@@ -518,6 +790,7 @@ class ShardedFeatureCache:
         threshold: float = 0.15,
         t_bucket: int = 125,
         mode: str = "cross",
+        spill_mb: float = 0.0,
         dtype=jnp.float32,
     ):
         self.mesh = mesh
@@ -533,6 +806,18 @@ class ShardedFeatureCache:
             )
             for _ in range(self.n_shards)
         ]
+        # one generation clock across all rings: slot gens are totally
+        # ordered engine-wide, so a single scalar cursor drives key deltas
+        for ring in self.rings[1:]:
+            ring._clock = self.rings[0]._clock
+        # ONE spill ring shared by every shard: demoted captures from any
+        # shard can be promoted onto any other, which is where the global
+        # (cross-shard) capacity win comes from
+        self.spill: SpillRing | None = None
+        if spill_mb > 0:
+            self.spill = SpillRing(int(spill_mb * 1024 * 1024), mode=mode)
+            for d, ring in enumerate(self.rings):
+                ring.on_evict = functools.partial(self._demote, d)
         total = self.n_shards * slots_per_shard
         self._sk_shape = (total, 2) + SM.feat_shape(ucfg, e_sk, 1)[1:]
         self._rf_shape = (total, 2) + SM.feat_shape(ucfg, e_rf, 1)[1:]
@@ -547,11 +832,62 @@ class ShardedFeatureCache:
 
         for ring in self.rings:
             ring.reset_meta()
+        if self.spill is not None:
+            self.spill.reset()
         sh = lane_sharding(self.mesh)
         self.state = CacheState(
             f_sk=jax.device_put(jnp.zeros(self._sk_shape, self._dtype), sh),
             f_rf=jax.device_put(jnp.zeros(self._rf_shape, self._dtype), sh),
         )
+
+    # -- spill tier ----------------------------------------------------------
+
+    def _demote(self, shard: int, slot: int) -> None:
+        """Ring ``shard``'s eviction hook: copy the victim (global slot
+        ``shard * S + slot``) to the shared host spill under its old key."""
+        ring = self.rings[shard]
+        if not ring.valid[slot]:
+            return
+        g = shard * self.slots_per_shard + slot
+        self.spill.put(
+            int(ring.bucket[slot]), int(ring.offset[slot]), int(ring.rid[slot]),
+            ring.sig[slot],
+            np.asarray(self.state.f_sk[g]), np.asarray(self.state.f_rf[g]),
+        )
+
+    def promote(
+        self, shard: int, t: int, sig: np.ndarray, rid: int,
+        threshold: float | None = None, offset: int = 0,
+        exclude: set[int] | tuple = (),
+    ) -> int | None:
+        """Lift a spill-resident match onto shard ``shard``'s ring.
+
+        Because the spill is shared, this is also the cross-shard feature
+        path: a capture demoted off shard A's ring can be promoted onto
+        shard B's when B admits a request it would serve.  Keeps the
+        original owner rid (see :meth:`FeatureCache.promote`).  Returns the
+        *shard-local* slot or None.
+        """
+        if self.spill is None:
+            return None
+        ring = self.rings[shard]
+        thr = ring.threshold if threshold is None else threshold
+        entry = self.spill.probe(ring.bucket_of(t), sig, rid, thr, offset)
+        if entry is None:
+            return None
+        slot = ring.reserve(
+            entry.bucket * self.t_bucket, entry.sig, entry.rid,
+            exclude=exclude, offset=entry.offset,
+        )
+        if slot is None:
+            return None
+        g = shard * self.slots_per_shard + slot
+        self.state = _upload_slot(
+            self.state, jnp.int32(g),
+            jnp.asarray(entry.f_sk), jnp.asarray(entry.f_rf),
+        )
+        self.spill.promotions += 1
+        return slot
 
     # -- shard-local metadata ops -------------------------------------------
 
@@ -623,13 +959,37 @@ class ShardedFeatureCache:
         agg["shard_hit_rates"] = [
             round(r.probe_hits / r.probes, 3) if r.probes else 0.0 for r in self.rings
         ]
+        if self.spill is not None:
+            agg.update(self.spill.stats())
         return agg
 
+    @property
+    def version(self) -> int:
+        """Newest key generation across all rings (shared clock)."""
+        return self.rings[0].version
+
     def slots_summary(self) -> dict:
-        """Per-shard ring geometry + warm-slot keys (``GET /stats``)."""
+        """Per-shard ring geometry + warm-slot keys (``GET /stats``).
+
+        ``version`` is the shared generation clock — one scalar cursor
+        covers every ring, so the aggregated table gossips incrementally
+        through :meth:`keys_delta` exactly like the single-ring cache.
+        """
         return {
             "mode": self.mode,
             "threshold": self.threshold,
             "t_bucket": self.t_bucket,
+            "version": self.version,
             "rings": [ring.slot_summary() for ring in self.rings],
+        }
+
+    def keys_delta(self, since: int = 0) -> dict:
+        """Incremental form of :meth:`slots_summary` (``GET /cache/keys``)."""
+        return {
+            "mode": self.mode,
+            "threshold": self.threshold,
+            "t_bucket": self.t_bucket,
+            "version": self.version,
+            "since": int(since),
+            "rings": [ring.key_delta(since) for ring in self.rings],
         }

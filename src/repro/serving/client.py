@@ -131,6 +131,12 @@ class FrontendClient:
     async def stats(self) -> dict:
         return await self._request_json("GET", "/stats")
 
+    async def cache_keys(self, since: int = 0) -> dict:
+        """Incremental cache-key delta: every slot key whose generation
+        counter is newer than ``since`` (the gossip protocol; see
+        ``GET /cache/keys`` in docs/api.md)."""
+        return await self._request_json("GET", f"/cache/keys?since={int(since)}")
+
     async def cancel(self, rid: int) -> dict:
         return await self._request_json("POST", "/cancel", {"rid": rid})
 
@@ -491,7 +497,19 @@ async def _amain(args) -> int:
             fleet = rstats.get("fleet")
             if fleet:
                 print(f"[client] fleet: {fleet}")
-            router_ok = rblock.get("ready", 0) >= 1
+                # per-tier cache attribution must survive fleet aggregation:
+                # replicas always publish these, so their absence means the
+                # router dropped them on the floor
+                missing = [k for k in ("hbm_hits", "spill_promotions", "gossip_routed")
+                           if k not in fleet]
+                if missing:
+                    print(
+                        f"[client] FAIL: fleet stats missing per-tier cache "
+                        f"counters {missing}",
+                        file=sys.stderr,
+                    )
+                    router_ok = False
+            router_ok = router_ok and rblock.get("ready", 0) >= 1
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)

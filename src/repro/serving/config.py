@@ -74,6 +74,8 @@ def from_args(args: Any, *, decode_images: bool = True) -> EngineConfig:
         cache_slots=getattr(args, "cache_slots", 16),
         cache_threshold=getattr(args, "cache_threshold", 0.15),
         cache_t_bucket=getattr(args, "cache_bucket", 125),
+        cache_spill_mb=getattr(args, "cache_spill_mb", 0.0),
+        cache_gossip=getattr(args, "cache_gossip", True),
         n_shards=getattr(args, "shards", 1),
         backend=getattr(args, "kernels", None) or "xla",
         unet=unet,

@@ -332,6 +332,31 @@ class EngineDriver:
                 raise TimeoutError("driver did not answer the stats probe")
         return box
 
+    def cache_keys(self, since: int = 0, timeout: float = 10.0) -> dict:
+        """Incremental cache key table (``GET /cache/keys`` payload), taken
+        on the driver thread: only slots whose key generation exceeds
+        ``since``, plus the current ``version`` cursor.  A cacheless engine
+        answers an empty table (version 0) rather than erroring, so probes
+        are safe against any engine config."""
+        def _keys() -> dict:
+            cache = getattr(self.engine, "cache", None)
+            if cache is None or not hasattr(cache, "keys_delta"):
+                return {"version": 0, "since": int(since), "rings": []}
+            return cache.keys_delta(since)
+
+        if self._thread is None or not self._thread.is_alive():
+            return _keys()
+        box: dict = {}
+        ready = threading.Event()
+        self._inbox.put(("keys", _keys, box, ready))
+        deadline = time.perf_counter() + timeout
+        while not ready.wait(0.1):
+            if not self._thread.is_alive():
+                return _keys()
+            if time.perf_counter() >= deadline:
+                raise TimeoutError("driver did not answer the cache-keys probe")
+        return box
+
     def shutdown(self, timeout: float | None = None) -> dict:
         """Graceful drain: refuse new submissions, run everything already
         accepted to a terminal event, stop the thread, return the final
@@ -419,6 +444,10 @@ class EngineDriver:
         elif kind == "stats":
             _, box, ready = msg
             box.update(self._snapshot())
+            ready.set()
+        elif kind == "keys":
+            _, keys_fn, box, ready = msg
+            box.update(keys_fn())
             ready.set()
         # "wake" carries no payload — it only unblocks the idle get()
 

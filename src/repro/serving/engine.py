@@ -154,6 +154,19 @@ class EngineConfig:
     #: never demote a lane's first ``cache_min_step`` plan steps (protects
     #: the PNDM warmup / the paper's semantic-planning phase)
     cache_min_step: int = 1
+    #: host-RAM spill tier under the HBM slot ring, in megabytes: ring
+    #: evictions demote their features to a byte-capped host LRU
+    #: (float32-lossless) and admission prefetches spill-resident matches
+    #: back onto the device ring before the lane's first planned FULL
+    #: step.  0 disables the tier (evictions drop captures, exactly the
+    #: pre-spill behaviour)
+    cache_spill_mb: float = 0.0
+    #: admission-time warmth migration from gossiped slot keys: the
+    #: sharded engine redirects a queued request to the shard whose ring
+    #: would serve its FULL steps (instead of the emptiest shard), and the
+    #: replica router scores replicas on incrementally-gossiped key tables
+    #: (``GET /cache/keys``) instead of full per-probe ``/stats`` polls
+    cache_gossip: bool = True
     #: lane shards over a ``("data",)`` device mesh; 1 = single-device
     #: engine (exactly the pre-sharding behaviour), N > 1 = mesh-sharded
     #: engine (``ShardedDiffusionEngine``) with ``n_lanes / N`` lanes and
@@ -194,6 +207,8 @@ class EngineConfig:
             )
         if self.backend not in ("xla", "pallas"):
             raise ValueError(f"backend must be xla|pallas, got {self.backend!r}")
+        if self.cache_spill_mb < 0:
+            raise ValueError("cache_spill_mb must be >= 0")
 
 
 class DiffusionEngine:
@@ -247,6 +262,7 @@ class DiffusionEngine:
                 threshold=config.cache_threshold,
                 t_bucket=config.cache_t_bucket,
                 mode=config.cache_mode,
+                spill_mb=config.cache_spill_mb,
             )
         self._state = LN.init_lanes(
             ucfg, config.n_lanes, config.max_steps, self.e_sk, self.e_rf
@@ -394,6 +410,35 @@ class DiffusionEngine:
 
     # -- event loop ---------------------------------------------------------
 
+    def _prefetch_spill(self, req: GenRequest, shard: int | None = None) -> None:
+        """Admission-time spill prefetch: for each of the request's planned
+        FULL steps that no device slot would serve yet, probe the host
+        spill tier and promote a match onto the device ring (shard ``shard``
+        for the sharded engine) — so the lane's first planned FULL step
+        already finds its features in HBM.  Threshold-0 steps never probe
+        (the bit-exactness guarantee extends through the spill tier)."""
+        cache = self.cache
+        if cache is None or getattr(cache, "spill", None) is None or not req.allow_cache:
+            return
+        lp, sig, off = req._lane_plan, req._sig, req.sched_offset
+        for i in range(lp.n_steps):
+            if lp.branches[i] != SM.FULL or i < self.config.cache_min_step:
+                continue
+            thr = float(lp.thr[i])
+            if thr <= 0:
+                continue
+            t = int(lp.ts[i])
+            if shard is None:
+                if cache.probe(t, sig, req.rid, thr, off) is not None:
+                    continue  # already warm on the device ring
+                slot = cache.promote(t, sig, req.rid, thr, off)
+            else:
+                if cache.probe(shard, t, sig, req.rid, thr, off) is not None:
+                    continue
+                slot = cache.promote(shard, t, sig, req.rid, thr, off)
+            if slot is not None:
+                self.metrics.spill_promotions += 1
+
     def _backfill(self, now_s: float) -> None:
         for lane, holder in enumerate(self._lane_req):
             if holder is not None:
@@ -401,6 +446,7 @@ class DiffusionEngine:
             req = self.scheduler.next_request(self._remaining_branches())
             if req is None:
                 return
+            self._prefetch_spill(req)
             lp = req._lane_plan
             mask, x_init, noise0 = self._admit_extras(req)
             self._state = self._admit(
@@ -713,6 +759,7 @@ class ShardedDiffusionEngine(DiffusionEngine):
                 threshold=config.cache_threshold,
                 t_bucket=config.cache_t_bucket,
                 mode=config.cache_mode,
+                spill_mb=config.cache_spill_mb,
             )
         self._params = jax.device_put(params, SH.replicated_sharding(self.mesh))
         self._state = LN.init_sharded_lanes(
@@ -758,11 +805,19 @@ class ShardedDiffusionEngine(DiffusionEngine):
     # -- event loop -----------------------------------------------------------
 
     def _backfill(self, now_s: float) -> None:
-        """Admit queued requests, always into the emptiest shard first.
+        """Admit queued requests, into the emptiest shard by default — or,
+        with ``cache_gossip``, into the shard whose ring would actually
+        serve a windowed request's FULL steps.
 
         Each admission re-ranks the shards, so a burst spreads evenly
         instead of piling into the lowest-numbered lanes; within a shard
-        the lowest empty lane wins (deterministic placement).
+        the lowest empty lane wins (deterministic placement).  The warmth
+        redirect is the admission-time migration half of the global cache
+        tier: shard-local rings mean a warm request admitted to the wrong
+        shard hits nothing, so when the scheduler's fleet-wide warmth map
+        (:meth:`~repro.serving.scheduler.CacheAwareScheduler.peek_warm_shard`)
+        names a warm shard with a free lane, placement follows the warmth
+        instead of the load.
         """
         while True:
             empty = [i for i, r in enumerate(self._lane_req) if r is None]
@@ -771,11 +826,19 @@ class ShardedDiffusionEngine(DiffusionEngine):
             counts = self._shard_active_counts()
             lane = min(empty, key=lambda i: (counts[self._shard_of(i)], i))
             shard = self._shard_of(lane)
+            if self.config.cache_gossip and hasattr(self.scheduler, "peek_warm_shard"):
+                open_shards = sorted({self._shard_of(i) for i in empty})
+                warm = self.scheduler.peek_warm_shard(open_shards)
+                if warm is not None and warm != shard:
+                    lane = min(i for i in empty if self._shard_of(i) == warm)
+                    shard = warm
+                    self.metrics.gossip_routed += 1
             req = self.scheduler.next_request(
                 self._shard_remaining_branches(shard), shard=shard
             )
             if req is None:
                 return
+            self._prefetch_spill(req, shard)
             lp = req._lane_plan
             mask, x_init, noise0 = self._admit_extras(req)
             self._state = self._admit(

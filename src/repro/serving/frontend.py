@@ -50,6 +50,13 @@ Endpoints (HTTP/1.1, ``Connection: close``):
     backend (``kernels``) and per-backend micro-step timing
     (``step_time_by_backend``), so mixed-quality streams are observable
     without the bench harness.
+``GET /cache/keys?since=N``
+    Incremental cache-key gossip: warm-slot key rows (bucket, signature,
+    schedule offset, generation stamp — never features) written after
+    generation ``N``, plus the current ``version`` cursor.  The replica
+    router polls this instead of full ``/stats`` snapshots to keep its
+    warmth map fresh cheaply; ``since=0`` (the default) returns the whole
+    warm table.
 ``POST /shutdown``
     Graceful drain: ``202`` immediately, then stop accepting, run every
     in-flight request to a terminal event, flush the open streams, and
@@ -389,10 +396,15 @@ class HTTPFrontend:
             except json.JSONDecodeError:
                 return await send_json(writer, 400, {"error": "body is not valid JSON"})
 
+            # query strings arrive verbatim in the request-line path
+            # (``/cache/keys?since=42``); routes match on the bare path
+            path, _, query = path.partition("?")
             if method == "GET" and path == "/healthz":
                 await self._handle_health(writer)
             elif method == "GET" and path == "/stats":
                 await self._handle_stats(writer)
+            elif method == "GET" and path == "/cache/keys":
+                await self._handle_cache_keys(writer, query)
             elif method == "POST" and path == "/generate":
                 await self._handle_generate(writer, payload)
             elif method == "POST" and path == "/cancel":
@@ -450,6 +462,31 @@ class HTTPFrontend:
             )
         summary = dict(summary, routing=self._routing_info())
         await send_json(writer, 200, summary)
+
+    async def _handle_cache_keys(self, writer: asyncio.StreamWriter, query: str) -> None:
+        """``GET /cache/keys[?since=N]`` — the incremental gossip channel:
+        warm-slot key rows written after generation ``since`` plus the
+        current ``version`` cursor (see ``SlotRing.key_delta``).  A
+        cacheless engine answers an empty table, so pollers need no
+        capability probe."""
+        since = 0
+        for part in query.split("&"):
+            k, _, v = part.partition("=")
+            if k == "since":
+                try:
+                    since = int(v)
+                except ValueError:
+                    return await send_json(
+                        writer, 400, {"error": "since must be an integer generation"}
+                    )
+        loop = asyncio.get_running_loop()
+        try:
+            keys = await loop.run_in_executor(None, self.driver.cache_keys, since)
+        except TimeoutError:
+            return await send_json(
+                writer, 503, {"error": "cache-keys probe timed out (engine busy)"}
+            )
+        await send_json(writer, 200, dict(keys, routing=self._routing_info()))
 
     async def _handle_cancel(self, writer: asyncio.StreamWriter, payload: dict) -> None:
         try:

@@ -34,6 +34,15 @@ class ServingMetrics:
     demoted_steps: int = 0
     #: planned-SKETCH lane-steps served from the feature cache as REFINE
     demoted_refine_steps: int = 0
+    # -- cache-tier attribution (which tier served / placed the work) --------
+    #: executed demotions served straight from the device (HBM) slot ring
+    hbm_hits: int = 0
+    #: spill-resident captures lifted back onto the device ring at admission
+    #: (the host-RAM tier paying off; incremented by the engine's prefetch)
+    spill_promotions: int = 0
+    #: admissions redirected to a cache-warm shard/replica by gossiped slot
+    #: keys instead of the load-only default placement
+    gossip_routed: int = 0
     #: submitted requests per resolved quality tier ("full"/"pas" = legacy)
     quality_mix: dict[str, int] = dataclasses.field(default_factory=dict)
     #: host wall seconds spent in ``engine.step`` per kernel backend
@@ -60,6 +69,8 @@ class ServingMetrics:
         self.refine_steps += n_refine
         self.demoted_steps += n_demoted
         self.demoted_refine_steps += n_demoted_refine
+        # every executed demotion was served by a device-resident slot
+        self.hbm_hits += n_demoted + n_demoted_refine
         self.occupancy.append(n_active / max(n_lanes, 1))
         if n_active:
             self.advance_eff.append(n_advanced / n_active)
@@ -109,6 +120,11 @@ class ServingMetrics:
             "cache_hit_rate": round(
                 self.demoted_steps / max(self.full_steps + self.demoted_steps, 1), 3
             ),
+            # per-tier attribution: device-ring hits, spill-tier promotions,
+            # gossip-directed admissions (all zero without the cache tiers)
+            "hbm_hits": self.hbm_hits,
+            "spill_promotions": self.spill_promotions,
+            "gossip_routed": self.gossip_routed,
             "quality_mix": dict(sorted(self.quality_mix.items())),
             "step_time_by_backend": {
                 k: {"steps": c, "mean_s": round(t / max(c, 1), 6)}

@@ -14,10 +14,15 @@ into a single fault-tolerant endpoint:
 * **Routing** — ``POST /generate`` is proxied to the least-loaded ready
   replica, refined by a cache-warmth hint: replicas publish their
   :class:`~repro.serving.cache.SlotRing` keys (timestep bucket, schedule
-  offset, prompt signature) in ``GET /stats``, and the router scores each
-  payload's synthesized signature against them — the cross-process
-  extension of :class:`~repro.serving.scheduler.CacheAwareScheduler`'s
-  warm-shard hint.  Client-visible rids are router-allocated; replica rids
+  offset, prompt signature) in ``GET /stats``, and the supervisor keeps a
+  per-replica *gossip mirror* of them fresh through incremental
+  ``GET /cache/keys?since=N`` deltas (new slot generations only, so the
+  steady-state exchange is a few rows, not the ring).  The router scores
+  each payload's synthesized signature against the mirror — the
+  cross-process extension of
+  :class:`~repro.serving.scheduler.CacheAwareScheduler`'s warm-shard
+  hint — and counts admissions where warmth beat least-loaded placement
+  as ``gossip_routed``.  Client-visible rids are router-allocated; replica rids
   are rewritten on every proxied event, so ``POST /cancel`` works on the
   router exactly as on a single server.
 * **Failover** — requests the router has *accepted* (first ``queued`` event
@@ -74,13 +79,16 @@ REPLICA_STAT_KEYS = (
     "mean_occupancy", "throughput_req_s", "micro_steps",
     "cache_hit_rate", "cache_warm_slots", "cache_probes",
     "cache_probe_hits", "cache_evictions", "kernels", "mode",
+    "hbm_hits", "spill_promotions", "gossip_routed",
+    "cache_spill_demotions", "cache_spill_promotions", "cache_spill_entries",
 )
 
 #: fleet counters summed across replicas in the router's ``/stats``
 FLEET_SUM_KEYS = (
     "requests", "completed", "micro_steps", "full_steps", "sketch_steps",
     "refine_steps", "cache_probes", "cache_probe_hits", "cache_inserts",
-    "cache_evictions",
+    "cache_evictions", "hbm_hits", "spill_promotions", "gossip_routed",
+    "cache_spill_demotions", "cache_spill_promotions", "cache_spill_entries",
 )
 
 
@@ -241,6 +249,12 @@ class ReplicaHandle:
         self.inflight = 0  # router-routed open weight (variants count K)
         self.max_inflight = 1
         self.last_stats: dict = {}
+        # gossip mirror of the replica's warm slot keys: incremental
+        # ``GET /cache/keys?since=N`` deltas merged by (ring, slot), so
+        # steady-state refreshes move O(new slots) bytes, not the whole ring
+        self.keys_version = 0
+        self._key_mirror: dict[tuple[int, int], dict] = {}
+        self._keys_meta: dict = {}
         self._probes = 0
         self._port_file: str | None = None
         self._log_file = None
@@ -275,6 +289,9 @@ class ReplicaHandle:
         self.port = None
         self.fails = 0
         self.last_stats = {}
+        self.keys_version = 0
+        self._key_mirror = {}
+        self._keys_meta = {}
         self._port_file = os.path.join(
             self.run_dir, f"replica{self.idx}.gen{self.generation}.port"
         )
@@ -330,6 +347,55 @@ class ReplicaHandle:
             return self.last_stats
         except (RequestRejected, ConnectionError, OSError, asyncio.TimeoutError):
             return None
+
+    async def refresh_keys(self, timeout_s: float = 10.0) -> dict | None:
+        """Pull the replica's cache-key delta since the last seen generation
+        and merge it into the gossip mirror; None (mirror untouched) on
+        failure.
+
+        A *backwards* version means the replica (or its cache) restarted
+        under us — the mirror is discarded and rebuilt from a full since=0
+        fetch, so stale keys from the dead generation can never score a
+        warmth hint.
+        """
+        if not self.ready:
+            return None
+        try:
+            delta = await asyncio.wait_for(
+                self.client().cache_keys(self.keys_version), timeout_s
+            )
+            version = int(delta.get("version", 0))
+            if version < self.keys_version:
+                self._key_mirror.clear()
+                self.keys_version = 0
+                delta = await asyncio.wait_for(
+                    self.client().cache_keys(0), timeout_s
+                )
+                version = int(delta.get("version", 0))
+            for r, ring in enumerate(delta.get("rings", ())):
+                for row in ring:
+                    self._key_mirror[(r, int(row["slot"]))] = row
+            self._keys_meta = {
+                k: delta[k] for k in ("mode", "threshold", "t_bucket") if k in delta
+            }
+            self.keys_version = version
+            return delta
+        except (RequestRejected, ConnectionError, OSError, asyncio.TimeoutError,
+                KeyError, TypeError, ValueError):
+            return None
+
+    def gossip_summary(self) -> dict:
+        """The slots summary synthesized from gossiped key deltas — same
+        shape as ``/stats``'s ``cache_slots_summary``, so the warmth scorer
+        consumes either interchangeably.  Empty when nothing has gossiped
+        yet (the caller falls back to the last ``/stats`` snapshot)."""
+        if not self._key_mirror or not self._keys_meta:
+            return {}
+        return {
+            **self._keys_meta,
+            "version": self.keys_version,
+            "rings": [list(self._key_mirror.values())],
+        }
 
     #: loopback probes finish in microseconds; a straggler verdict below
     #: this floor would just be scheduler jitter, so RTTs are clamped up
@@ -458,6 +524,7 @@ class ReplicaRouter:
         self.n_failed = 0
         self.n_rejected = 0
         self.n_resubmitted = 0
+        self.n_gossip_routed = 0  # admissions where warmth beat least-loaded
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -478,6 +545,7 @@ class ReplicaRouter:
             raise
         # prime routing geometry + slot summaries for the warmth hint
         await asyncio.gather(*(h.refresh_stats(self.probe_timeout_s) for h in self.replicas))
+        await asyncio.gather(*(h.refresh_keys(self.probe_timeout_s) for h in self.replicas))
         self._server = await asyncio.start_server(self._handle, self.host, self.port)
         self.port = self._server.sockets[0].getsockname()[1]
         self._supervisor_task = asyncio.create_task(self._supervise())
@@ -546,6 +614,7 @@ class ReplicaRouter:
             "failed": self.n_failed,
             "rejected": self.n_rejected,
             "resubmitted": self.n_resubmitted,
+            "gossip_routed": self.n_gossip_routed,
             "respawns": sum(h.respawns for h in self.replicas),
             "evictions": sum(h.evictions for h in self.replicas),
             "open": len(self._routes),
@@ -589,6 +658,10 @@ class ReplicaRouter:
                             )
                     if tick % self.stats_every == 0:
                         await h.refresh_stats(self.probe_timeout_s)
+                    # key deltas are cheap (new generations only), so gossip
+                    # every tick: the warmth map trails admission by at most
+                    # one health interval
+                    await h.refresh_keys(self.probe_timeout_s)
         except asyncio.CancelledError:
             pass
 
@@ -625,6 +698,7 @@ class ReplicaRouter:
             try:
                 await h.wait_ready()
                 await h.refresh_stats(self.probe_timeout_s)
+                await h.refresh_keys(self.probe_timeout_s)
                 self._log(f"[router] replica {h.idx} ready again on port {h.port}")
                 return
             except asyncio.CancelledError:
@@ -640,10 +714,12 @@ class ReplicaRouter:
         stats = h.last_stats
         if not stats:
             return 0.0
+        # the gossip mirror is fresher than the last full /stats snapshot
+        # (incremental deltas merge on every supervision refresh); fall back
+        # to the stats-published summary for replicas that never gossiped
+        summary = h.gossip_summary() or stats.get("cache_slots_summary") or {}
         try:
-            return payload_warmth(
-                payload, stats.get("routing") or {}, stats.get("cache_slots_summary") or {}
-            )
+            return payload_warmth(payload, stats.get("routing") or {}, summary)
         except Exception:
             return 0.0  # a hint only: malformed payloads get their 400 from the replica
 
@@ -653,7 +729,12 @@ class ReplicaRouter:
             return None
         loads = [h.load_frac for h in candidates]
         warmths = [self._warmth(h, payload) for h in candidates]
-        return candidates[pick_replica(loads, warmths, self.warmth_weight)]
+        choice = pick_replica(loads, warmths, self.warmth_weight)
+        if any(w > 0.0 for w in warmths) and choice != pick_replica(loads):
+            # warmth overrode plain least-loaded placement: that is the
+            # gossip map (or stats-published slot keys) steering admission
+            self.n_gossip_routed += 1
+        return candidates[choice]
 
     # -- connection handling ---------------------------------------------------
 

@@ -195,3 +195,25 @@ class CacheAwareScheduler(PlanAwareScheduler):
         if self.cache is not None and self.cache.n_warm > 0:
             return True
         return super()._consider_window(lane_branches)
+
+    def peek_warm_shard(self, shards: Sequence[int]) -> int | None:
+        """Fleet-wide warmth map over the admission window: the candidate
+        shard whose ring would serve the most of some windowed request's
+        FULL steps, or None when nothing in the window is warm anywhere.
+
+        This is the admission-time migration hook — the sharded engine
+        asks it *before* committing to the emptiest shard, so a warm
+        request lands on the shard that actually holds its slots (and the
+        paired ``next_request(shard=...)`` call then naturally prefers
+        that same warm request).  Read-only: no probes are counted and no
+        LRU order is perturbed (``plan_warmth`` probes are read-only).
+        """
+        if self.cache is None or self.cache.n_warm == 0 or not self._queue:
+            return None
+        best_shard, best_warmth = None, 0.0
+        for req in list(self._queue)[: self.window]:
+            for s in shards:
+                w = self.cache.plan_warmth(req, s)
+                if w > best_warmth:
+                    best_shard, best_warmth = s, w
+        return best_shard

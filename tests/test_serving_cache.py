@@ -19,7 +19,7 @@ from repro.serving import (
     prompt_signature,
     signature_distance,
 )
-from repro.serving.cache import select_entry_features
+from repro.serving.cache import SpillRing, select_entry_features
 
 TOY = get_unet_config("sd_toy")
 N_UP = U.n_up_steps(TOY)
@@ -218,11 +218,15 @@ def params():
     return U.init_unet(jax.random.key(0), TOY)
 
 
-def _engine(params, n_lanes, mode, threshold, scheduler=None, t_bucket=125, slots=8):
+def _engine(
+    params, n_lanes, mode, threshold, scheduler=None, t_bucket=125, slots=8,
+    spill_mb=0.0,
+):
     cfg = EngineConfig(
         n_lanes=n_lanes, max_steps=8, l_sketch=L_SK, l_refine=L_RF,
         decode_images=False, cache_mode=mode, cache_slots=slots,
         cache_threshold=threshold, cache_t_bucket=t_bucket,
+        cache_spill_mb=spill_mb,
     )
     return DiffusionEngine(TOY, DCFG, params, None, cfg, scheduler=scheduler)
 
@@ -346,3 +350,215 @@ def test_engine_summary_reports_cache_stats(params):
 def test_engine_config_rejects_bad_cache_mode():
     with pytest.raises(ValueError):
         EngineConfig(cache_mode="offf")
+
+
+# ---------------------------------------------------------------------------
+# Host-RAM spill tier (SpillRing + FeatureCache demote/promote)
+# ---------------------------------------------------------------------------
+
+SK_SLOT = (2,) + SM.feat_shape(TOY, E_SK, 1)[1:]
+RF_SLOT = (2,) + SM.feat_shape(TOY, E_RF, 1)[1:]
+
+
+def _capture(seed):
+    """One slot-shaped (cond, uncond) feature pair with full float32 noise —
+    the round-trip tests need mantissas that would expose any lossy copy."""
+    rng = np.random.default_rng(seed)
+    return (
+        rng.normal(size=SK_SLOT).astype(np.float32),
+        rng.normal(size=RF_SLOT).astype(np.float32),
+    )
+
+
+def _sig(seed=1):
+    return np.random.default_rng(seed).normal(size=(TOY.ctx_dim,)).astype(np.float32)
+
+
+def test_spill_round_trip_is_bitwise_lossless():
+    ring = SpillRing(1 << 22, mode="cross")
+    f_sk, f_rf = _capture(0)
+    sig = _sig()
+    assert ring.put(2, 0, 7, sig, f_sk, f_rf)
+    entry = ring.probe(2, sig, rid=9, threshold=0.5, offset=0)
+    assert entry is not None
+    np.testing.assert_array_equal(entry.f_sk, f_sk)
+    np.testing.assert_array_equal(entry.f_rf, f_rf)
+
+
+def test_spill_probe_key_policy_matches_device_ring():
+    """Same strict-threshold / bucket / offset / rid scoping as SlotRing:
+    threshold 0 never hits (bit-exactness extends through the spill tier),
+    cross mode never serves the owner, offsets are isolated."""
+    ring = SpillRing(1 << 22, mode="cross")
+    f_sk, f_rf = _capture(0)
+    sig = _sig()
+    ring.put(2, 0, 7, sig, f_sk, f_rf)
+    assert ring.probe(2, sig, rid=9, threshold=0.0, offset=0) is None
+    assert ring.probe(2, sig, rid=7, threshold=0.5, offset=0) is None  # owner
+    assert ring.probe(3, sig, rid=9, threshold=0.5, offset=0) is None  # bucket
+    assert ring.probe(2, sig, rid=9, threshold=0.5, offset=1) is None  # offset
+    assert ring.probe(2, 10 * sig, rid=9, threshold=0.5, offset=0) is None
+    intra = SpillRing(1 << 22, mode="intra")
+    intra.put(2, 0, 7, sig, f_sk, f_rf)
+    assert intra.probe(2, sig, rid=9, threshold=0.5, offset=0) is None
+    assert intra.probe(2, sig, rid=7, threshold=0.5, offset=0) is not None
+
+
+def test_spill_byte_cap_evicts_lru_and_probe_touches():
+    f_sk, f_rf = _capture(0)
+    entry_bytes = f_sk.nbytes + f_rf.nbytes
+    ring = SpillRing(int(2.5 * entry_bytes), mode="cross")
+    sig = _sig()
+    ring.put(1, 0, 1, sig, f_sk, f_rf)
+    ring.put(2, 0, 2, sig, f_sk, f_rf)
+    assert ring.probe(1, sig, rid=9, threshold=0.5, offset=0) is not None  # touch
+    ring.put(3, 0, 3, sig, f_sk, f_rf)  # cap forces one out: LRU = bucket 2
+    stats = ring.stats()
+    assert stats["cache_spill_entries"] == 2
+    assert stats["cache_spill_evictions"] == 1
+    assert ring.probe(2, sig, rid=9, threshold=0.5, offset=0) is None
+    assert ring.probe(1, sig, rid=9, threshold=0.5, offset=0) is not None
+    assert ring.probe(3, sig, rid=9, threshold=0.5, offset=0) is not None
+
+
+def test_spill_refresh_replaces_same_key():
+    ring = SpillRing(1 << 22, mode="cross")
+    sig = _sig()
+    old_sk, old_rf = _capture(0)
+    new_sk, new_rf = _capture(1)
+    ring.put(2, 0, 7, sig, old_sk, old_rf)
+    ring.put(2, 0, 7, sig, new_sk, new_rf)
+    assert ring.stats()["cache_spill_entries"] == 1
+    entry = ring.probe(2, sig, rid=9, threshold=0.5, offset=0)
+    np.testing.assert_array_equal(entry.f_sk, new_sk)
+
+
+def test_spill_rejects_oversized_capture():
+    f_sk, f_rf = _capture(0)
+    ring = SpillRing(f_sk.nbytes // 2, mode="cross")
+    assert not ring.put(2, 0, 7, _sig(), f_sk, f_rf)
+    assert ring.stats()["cache_spill_entries"] == 0
+
+
+def test_feature_cache_eviction_demotes_and_promote_restores_exact():
+    """The full HBM -> host -> HBM loop: an evicted slot's features come
+    back bit-identical, on a slot still keyed to the *original* owner (so
+    cross-mode reuse by the requester works and self-reuse stays barred)."""
+    c = _cache(n_slots=1, t_bucket=1, spill_mb=4)
+    sig = _sig()
+    rng = np.random.default_rng(3)
+    f_sk = jnp.asarray(rng.normal(size=SM.feat_shape(TOY, E_SK, 2)).astype(np.float32))
+    f_rf = jnp.asarray(rng.normal(size=SM.feat_shape(TOY, E_RF, 2)).astype(np.float32))
+    c.insert(f_sk, f_rf, lane=0, t=1, sig=sig, rid=1)
+    want_sk, want_rf = np.asarray(c.state.f_sk[0]), np.asarray(c.state.f_rf[0])
+
+    other_sk, other_rf = _lane_feats(1, fill=9.0)
+    c.insert(other_sk, other_rf, lane=0, t=2, sig=10 * sig, rid=2)  # evicts rid 1
+    assert c.spill.demotions == 1
+    assert c.probe(1, sig, rid=9) is None  # gone from the device ring
+
+    slot = c.promote(t=1, sig=sig, rid=9, threshold=0.5)
+    assert slot is not None
+    assert c.spill.promotions == 1
+    assert c.probe(1, sig, rid=9) == slot  # back on the device ring...
+    assert c.probe(1, sig, rid=1) is None  # ...still owned by rid 1
+    np.testing.assert_array_equal(np.asarray(c.state.f_sk[slot]), want_sk)
+    np.testing.assert_array_equal(np.asarray(c.state.f_rf[slot]), want_rf)
+    # the promoted slot's eviction in turn re-demotes (refreshes) the entry
+    assert c.spill.stats()["cache_spill_entries"] >= 1
+
+
+def test_feature_cache_promote_threshold_zero_is_inert():
+    c = _cache(n_slots=1, t_bucket=1, spill_mb=4)
+    sig = _sig()
+    f_sk, f_rf = _lane_feats(1)
+    c.insert(f_sk, f_rf, lane=0, t=1, sig=sig, rid=1)
+    c.insert(f_sk, f_rf, lane=0, t=2, sig=10 * sig, rid=2)  # demote rid 1
+    assert c.promote(t=1, sig=sig, rid=9, threshold=0.0) is None
+    assert c.spill.promotions == 0
+
+
+def test_spill_disabled_keeps_pre_spill_eviction_behaviour():
+    c = _cache(n_slots=1, t_bucket=1)  # spill_mb=0
+    assert c.spill is None
+    sig = _sig()
+    f_sk, f_rf = _lane_feats(1)
+    c.insert(f_sk, f_rf, lane=0, t=1, sig=sig, rid=1)
+    c.insert(f_sk, f_rf, lane=0, t=2, sig=10 * sig, rid=2)
+    assert c.evictions == 1
+    assert c.promote(t=1, sig=sig, rid=9) is None
+
+
+def test_cache_reset_also_cools_the_spill(params):
+    c = _cache(n_slots=1, t_bucket=1, spill_mb=4)
+    sig = _sig()
+    f_sk, f_rf = _lane_feats(1)
+    c.insert(f_sk, f_rf, lane=0, t=1, sig=sig, rid=1)
+    c.insert(f_sk, f_rf, lane=0, t=2, sig=10 * sig, rid=2)
+    assert c.spill.stats()["cache_spill_entries"] == 1
+    c.reset()
+    stats = c.spill.stats()
+    assert stats["cache_spill_entries"] == 0
+    assert stats["cache_spill_demotions"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level spill behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_engine_spill_prefetch_promotes_and_serves(params):
+    """A twin whose donor capture was evicted off the ring still hits:
+    admission prefetch promotes the spill-resident capture back before the
+    lane's first *eligible* FULL step, and the promotion's LRU touch keeps
+    it alive through the twin's own step-0 capture.
+
+    One bucket spans the ladder, so each request holds exactly one slot
+    (refreshed in place): two cold requests around a 2-slot ring are
+    enough to push the donor out to the spill before the twin arrives.
+    """
+    twin_ctx = np.random.default_rng(77).normal(
+        size=(TOY.ctx_len, TOY.ctx_dim)
+    ).astype(np.float32) * 0.2
+    mk = lambda: [
+        _request(0, 6, _plan(6), noise_seed=0, ctx=twin_ctx),  # donor
+        _request(1, 6, _plan(6), noise_seed=1),  # cold churn...
+        _request(2, 6, _plan(6), noise_seed=2),  # ...evicts the donor
+        _request(3, 6, _plan(6), noise_seed=0, ctx=twin_ctx),  # twin
+    ]
+    dry = _engine(params, 1, "cross", 0.2, slots=2, t_bucket=1000)
+    _, cold = dry.run(mk())
+    assert cold["cache_hit_rate"] == 0.0  # without spill the donor is lost
+
+    eng = _engine(params, 1, "cross", 0.2, slots=2, t_bucket=1000, spill_mb=16)
+    done, summary = eng.run(mk())
+    assert len(done) == 4
+    assert summary["cache_spill_demotions"] > 0
+    assert summary["spill_promotions"] > 0
+    assert summary["cache_hit_rate"] > cold["cache_hit_rate"]
+    assert summary["demoted_full_steps"] > 0
+
+
+def test_engine_threshold_zero_stays_bit_exact_with_spill(params):
+    """The exact lane guarantee survives the spill tier: threshold 0 means
+    no probe, no prefetch, no promote — latents bitwise equal to cache off."""
+    mk = lambda: [_request(i, 6, _plan(6)) for i in range(3)]
+    base = {d.rid: d.latent for d in _engine(params, 1, "off", 0.0).run(mk())[0]}
+    eng = _engine(params, 1, "cross", 0.0, slots=1, spill_mb=16)
+    done, summary = eng.run(mk())
+    assert summary["demoted_full_steps"] == 0
+    assert summary["spill_promotions"] == 0
+    for d in done:
+        np.testing.assert_array_equal(d.latent, base[d.rid])
+
+
+def test_engine_summary_reports_spill_and_gossip_counters(params):
+    _, summary = _engine(params, 1, "cross", 0.2, spill_mb=4).run(
+        [_request(0, 4, None)]
+    )
+    for key in (
+        "cache_spill_capacity_bytes", "cache_spill_entries",
+        "cache_spill_demotions", "cache_spill_promotions",
+        "hbm_hits", "spill_promotions", "gossip_routed",
+    ):
+        assert key in summary, key

@@ -480,3 +480,126 @@ def test_exact_lane_bit_exact_amid_warm_draft_lanes():
     assert any(
         not _np.array_equal(warm[r], base[r]) for r in (0, 2)
     ), "warm draft lanes produced cache-off latents — no reuse happened?"
+
+
+# ---------------------------------------------------------------------------
+# SlotRing key-table invariants: LRU eviction order, offset-keyed isolation,
+# generation-counter monotonicity — the correctness base of the gossip
+# protocol (routers merge key deltas by (slot, gen) and trust the victim
+# the eviction hook hands to the spill tier to be the true LRU).
+# ---------------------------------------------------------------------------
+
+from repro.serving.cache import SlotRing
+
+
+def _ring(n_slots=4, mode="cross", threshold=0.25):
+    return SlotRing(n_slots, 3, threshold=threshold, t_bucket=100, mode=mode)
+
+
+def _apply_key_trace(ring: SlotRing, ops):
+    """Drive reserve/touch ops, asserting the LRU + clock invariants at
+    every step: each reserve ticks the clock exactly once and stamps the
+    written slot with the new value; LRU touches never tick it; an
+    eviction always claims the least-recently-used valid slot (checked
+    inside the hook, while the victim's metadata is still intact)."""
+    rng = np.random.default_rng(11)
+
+    def on_evict(slot):
+        assert ring.valid[slot], "evicted an empty slot"
+        assert ring.last_use[slot] == ring.last_use[ring.valid].min(), (
+            "evicted a slot that was not the LRU"
+        )
+
+    ring.on_evict = on_evict
+    version = ring.version
+    for kind, a, b in ops:
+        if kind == "reserve":
+            slot = ring.reserve(
+                (a % 5) * ring.t_bucket, rng.normal(size=3).astype(np.float32),
+                rid=b, offset=0,
+            )
+            assert slot is not None
+            assert ring.version == version + 1, "reserve must tick the clock once"
+            version = ring.version
+            assert int(ring.gen[slot]) == version, "written slot not stamped newest"
+        else:  # LRU touch of some warm slot (an executed hit)
+            warm = np.nonzero(ring.valid)[0]
+            if warm.size:
+                ring.note_hit(int(warm[a % warm.size]))
+                assert ring.version == version, "LRU touch must not tick the clock"
+    gens = ring.gen[ring.valid]
+    assert len(set(gens.tolist())) == gens.size, "duplicate generation stamps"
+    assert (gens <= ring.version).all()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_slot_ring_trace_invariants_seeded(seed):
+    rng = np.random.default_rng(9000 + seed)
+    ops = [
+        (("reserve" if rng.random() < 0.7 else "touch"),
+         int(rng.integers(0, 30)), int(rng.integers(0, 6)))
+        for _ in range(int(rng.integers(5, 40)))
+    ]
+    _apply_key_trace(_ring(n_slots=int(rng.integers(1, 5))), ops)
+
+
+@given(
+    n_slots=st.integers(1, 5),
+    ops=st.lists(
+        st.tuples(st.sampled_from(("reserve", "touch")),
+                  st.integers(0, 30), st.integers(0, 6)),
+        min_size=0, max_size=50,
+    ),
+)
+@settings(max_examples=120, deadline=None)
+def test_fuzz_slot_ring_trace_invariants(n_slots, ops):
+    _apply_key_trace(_ring(n_slots=n_slots), list(ops))
+
+
+@given(
+    offsets=st.lists(st.integers(0, 5), min_size=1, max_size=4, unique=True),
+    probe_offset=st.integers(0, 6),
+)
+@settings(max_examples=60, deadline=None)
+def test_fuzz_slot_ring_offset_isolation(offsets, probe_offset):
+    """Slots are keyed by schedule offset: a probe only ever hits a slot
+    captured under the same truncation, however close the signatures."""
+    ring = _ring(n_slots=8)
+    sig = np.ones(3, np.float32)
+    for i, off in enumerate(offsets):
+        ring.reserve(150, sig, rid=i, offset=off)
+    hit = ring.probe(150, sig, rid=99, threshold=0.5, offset=probe_offset)
+    if probe_offset in offsets:
+        assert hit is not None and int(ring.offset[hit]) == probe_offset
+    else:
+        assert hit is None
+
+
+@given(
+    writes=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 5), st.integers(0, 1)),
+        min_size=0, max_size=40,
+    ),
+    sync_every=st.integers(1, 7),
+)
+@settings(max_examples=80, deadline=None)
+def test_fuzz_key_delta_merge_reconstructs_summary(writes, sync_every):
+    """A consumer that merges ``key_delta(since)`` rows by slot index from
+    a monotone cursor ends up with exactly the full warm-slot summary —
+    the property the router's gossip mirror depends on."""
+    rng = np.random.default_rng(5)
+    ring = _ring(n_slots=3)
+    mirror: dict[int, dict] = {}
+    cursor = 0
+    for i, (b, rid, off) in enumerate(writes):
+        ring.reserve(b * ring.t_bucket, rng.normal(size=3).astype(np.float32),
+                     rid=rid, offset=off)
+        if i % sync_every == 0:
+            for row in ring.key_delta(cursor):
+                mirror[row["slot"]] = row
+            cursor = ring.version
+    for row in ring.key_delta(cursor):
+        mirror[row["slot"]] = row
+    full = {row["slot"]: row for row in ring.slot_summary(max_slots=None)}
+    assert mirror == full, "merged deltas diverged from the full key table"
+    assert ring.key_delta(ring.version) == [], "cursor at head must be empty"

@@ -167,6 +167,108 @@ def test_warmth_orders_replicas_for_identical_payload():
     assert pick_replica([0.5, 0.5], [w_cold, w_warm]) == 1
 
 
+def test_warmth_tolerates_truncated_and_annotated_summaries():
+    """``slots_summary`` payloads are capped and key-delta rows carry extra
+    bookkeeping (``slot``, ``gen``, ``version``): the scorer must use the
+    rows that made it through and ignore everything it does not know."""
+    p = {"prompt": "routing target", "seed": 77, "timesteps": 4}
+    sig = request_signature(p, 8, 32)
+    summary = _slots(slots=[dict(_slot(0, sig), slot=3, gen=41)])
+    summary["version"] = 41
+    summary["truncated"] = True
+    assert payload_warmth(p, ROUTING, summary) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Gossip mirror: incremental /cache/keys deltas -> slots-summary shape
+# ---------------------------------------------------------------------------
+
+
+class _FakeKeysHandle(ReplicaHandle):
+    """A ReplicaHandle whose ``/cache/keys`` endpoint is a scripted queue —
+    no subprocess, no socket; ``since`` arguments are recorded."""
+
+    def __init__(self, deltas):
+        super().__init__(0, ["true"], "/tmp")
+        self._deltas = list(deltas)
+        self.seen_since: list[int] = []
+
+    @property
+    def ready(self) -> bool:
+        return True
+
+    def client(self):
+        outer = self
+
+        class _C:
+            async def cache_keys(self, since: int = 0):
+                outer.seen_since.append(int(since))
+                return outer._deltas.pop(0)
+
+        return _C()
+
+
+def _delta(version, rows, **meta):
+    base = {"mode": "cross", "threshold": 0.5, "t_bucket": 125}
+    base.update(meta)
+    return {**base, "version": version, "rings": [rows]}
+
+
+def _key_row(slot, gen, bucket, sig, rid=0, offset=0):
+    return {
+        "slot": slot, "gen": gen, "bucket": bucket, "offset": offset,
+        "rid": rid, "sig": list(map(float, sig)),
+    }
+
+
+def test_gossip_mirror_merges_deltas_by_slot():
+    sig = np.zeros(4)
+    h = _FakeKeysHandle([
+        _delta(5, [_key_row(0, 4, 1, sig), _key_row(1, 5, 2, sig)]),
+        _delta(9, [_key_row(1, 9, 7, sig, rid=3), _key_row(2, 8, 4, sig)]),
+    ])
+    assert h.gossip_summary() == {}  # nothing gossiped yet: caller falls back
+    asyncio.run(h.refresh_keys())
+    asyncio.run(h.refresh_keys())
+    assert h.seen_since == [0, 5]  # cursor advanced, deltas stayed incremental
+    assert h.keys_version == 9
+    summary = h.gossip_summary()
+    assert summary["mode"] == "cross" and summary["version"] == 9
+    rows = {r["slot"]: r for r in summary["rings"][0]}
+    assert sorted(rows) == [0, 1, 2]
+    assert rows[1]["bucket"] == 7 and rows[1]["rid"] == 3  # newest gen wins
+
+
+def test_gossip_mirror_version_regression_resets_to_full_fetch():
+    """A version that went backwards = replica restarted: the mirror must
+    be discarded and rebuilt from since=0, never blended with stale keys."""
+    sig = np.zeros(4)
+    h = _FakeKeysHandle([
+        _delta(7, [_key_row(0, 7, 1, sig), _key_row(3, 6, 9, sig)]),
+        _delta(2, [_key_row(0, 2, 5, sig)]),  # regression trips the reset...
+        _delta(2, [_key_row(1, 2, 6, sig)]),  # ...and this full refetch wins
+    ])
+    asyncio.run(h.refresh_keys())
+    asyncio.run(h.refresh_keys())
+    assert h.seen_since == [0, 7, 0]
+    assert h.keys_version == 2
+    rows = {r["slot"]: r for r in h.gossip_summary()["rings"][0]}
+    assert sorted(rows) == [1], "stale pre-restart keys must not survive"
+    assert rows[1]["bucket"] == 6
+
+
+def test_gossip_summary_feeds_the_warmth_scorer():
+    """End to end over the mirror: a payload whose signature matches the
+    gossiped keys scores warm through ``payload_warmth`` without ever
+    fetching ``/stats``."""
+    p = {"prompt": "routing target", "seed": 77, "timesteps": 4}
+    sig = request_signature(p, 8, 32)
+    rows = [_key_row(s, s + 1, b, sig) for s, b in enumerate((0, 2, 4, 6))]
+    h = _FakeKeysHandle([_delta(4, rows)])
+    asyncio.run(h.refresh_keys())
+    assert payload_warmth(p, ROUTING, h.gossip_summary()) == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------------------
 # Replica selection
 # ---------------------------------------------------------------------------

@@ -300,6 +300,103 @@ def test_sharded_cache_reuse_is_shard_local(params):
 
 
 # ---------------------------------------------------------------------------
+# Global cache tier: warm-shard admission (gossip) + shared spill ring
+# ---------------------------------------------------------------------------
+
+
+@needs2
+@pytest.mark.parametrize("gossip", [True, False])
+def test_sharded_gossip_redirects_admission_to_warm_shard(params, gossip):
+    """With every lane empty, plain admission picks shard 0 (lowest index
+    among equally-empty shards).  When gossip is on and shard 1's ring is
+    the one holding the queued request's warm slots, the admission must
+    migrate there instead — and count itself in ``gossip_routed``."""
+    cfg = EngineConfig(
+        n_lanes=4, max_steps=8, l_sketch=L_SK, l_refine=L_RF,
+        decode_images=False, n_shards=2,
+        cache_mode="cross", cache_slots=4, cache_threshold=0.25,
+        cache_t_bucket=1000, cache_gossip=gossip,
+    )
+    eng = ShardedDiffusionEngine(
+        TOY, DCFG, params, None, cfg, scheduler=CacheAwareScheduler(window=2)
+    )
+    req = _request(0, 5, None, seed=70)
+    eng.submit(req)
+    # warm shard 1 with a foreign-rid slot matching the request's prompt
+    # (bucket 1000 spans the whole ladder, so every FULL step probes warm)
+    t0 = int(req._lane_plan.ts[1])
+    assert eng.cache.rings[1].reserve(t0, req._sig, rid=999) is not None
+    eng._backfill(0.0)
+    lanes = [i for i, r in enumerate(eng._lane_req) if r is not None]
+    assert len(lanes) == 1
+    if gossip:
+        assert eng._shard_of(lanes[0]) == 1, "admission should follow the warmth"
+        assert eng.metrics.gossip_routed == 1
+    else:
+        assert eng._shard_of(lanes[0]) == 0, "gossip off: emptiest shard wins"
+        assert eng.metrics.gossip_routed == 0
+
+
+@needs2
+def test_sharded_shared_spill_promotes_across_shards():
+    """The spill ring is shared by every shard: a capture demoted off shard
+    0's ring must be promotable onto shard 1's — that cross-shard feature
+    path is where the global tier's capacity win comes from."""
+    from repro.common.sharding import lane_mesh
+    from repro.serving.cache import ShardedFeatureCache
+
+    e_sk, e_rf = N_UP - L_SK, N_UP - L_RF
+    c = ShardedFeatureCache(
+        TOY, e_sk, e_rf, lane_mesh(2), slots_per_shard=1,
+        threshold=0.25, t_bucket=1, mode="cross", spill_mb=4,
+    )
+    sig = np.random.default_rng(4).normal(size=(TOY.ctx_dim,)).astype(np.float32)
+    assert c.rings[0].reserve(1, sig, rid=1) == 0
+    assert c.rings[0].reserve(2, 10 * sig, rid=2) == 0  # evicts rid 1 -> spill
+    assert c.spill.demotions == 1
+    assert c.probe(0, 1, sig, rid=9) is None  # off shard 0's ring now
+
+    slot = c.promote(1, 1, sig, rid=9)  # onto the *other* shard
+    assert slot == 0
+    assert c.spill.promotions == 1
+    assert c.probe(1, 1, sig, rid=9) == 0  # shard 1 now serves it
+    assert c.probe(1, 1, sig, rid=1) is None  # owner rid preserved
+    stats = c.stats()
+    assert stats["cache_spill_demotions"] >= 1
+    assert stats["cache_spill_promotions"] == 1
+
+
+@needs2
+def test_sharded_threshold_zero_bit_exact_with_spill(params):
+    """Threshold 0 + spill on the sharded engine: no probes, no promotes,
+    latents bitwise equal to the cache-off engine (the exact-lane guarantee
+    extends through the whole tier stack)."""
+    mk = lambda: [
+        _request(i, 4 + (i % 2), _plan_for(4 + (i % 2)), seed=90 + i)
+        for i in range(4)
+    ]
+    common = dict(
+        n_lanes=4, max_steps=8, l_sketch=L_SK, l_refine=L_RF,
+        decode_images=False, n_shards=2,
+    )
+    base_eng = ShardedDiffusionEngine(
+        TOY, DCFG, params, None, EngineConfig(**common)
+    )
+    base = {d.rid: d.latent for d in base_eng.run(mk())[0]}
+    cfg = EngineConfig(
+        **common, cache_mode="cross", cache_threshold=0.0,
+        cache_slots=1, cache_spill_mb=16,
+    )
+    eng = ShardedDiffusionEngine(TOY, DCFG, params, None, cfg)
+    done, summary = eng.run(mk())
+    assert summary["demoted_full_steps"] == 0
+    assert summary["spill_promotions"] == 0
+    assert sorted(d.rid for d in done) == sorted(base)
+    for d in done:
+        np.testing.assert_array_equal(d.latent, base[d.rid])
+
+
+# ---------------------------------------------------------------------------
 # CLI smoke: forces host devices in a child process, so it runs everywhere
 # ---------------------------------------------------------------------------
 
